@@ -1,0 +1,59 @@
+"""Paper Sec. III-B: skip granularity vs harvestable similarity.
+
+The paper: SVE sdot needs a whole 4-element sub-vector of deltas at zero —
+only 13.9 % of ResNet's raw similarity survives that constraint — motivating
+per-scalar mla8. The TPU skip unit is a (block_m × block_k) tile; this
+benchmark measures the harvest ratio across tile widths for (a) unstructured
+random similarity and (b) structured similarity (persistent zero/saturated
+channels, what int8+ReLU activations actually produce — cf. similarity.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.similarity import harvestable_similarity
+
+BLOCK_KS = (1, 32, 128, 256, 512)
+
+
+def make_streams(rng, m, k, sim, structured: bool):
+    cur = rng.integers(-20, 21, size=(m, k)).astype(np.int8)
+    if structured:
+        # contiguous channel GROUPS persist (ReLU-dead / saturated regions
+        # of int8 activations are spatially clustered) — group width 128
+        g = 128
+        groups = rng.random(k // g) < sim
+        keep = np.broadcast_to(np.repeat(groups, g)[None, :], (m, k))
+    else:
+        keep = rng.random((m, k)) < sim
+    prev = np.where(keep, cur, cur + 3).astype(np.int8)
+    return jnp.asarray(cur), jnp.asarray(prev)
+
+
+def main(emit):
+    rng = np.random.default_rng(0)
+    m, k = 64, 4096
+    rows = []
+    for structured in (False, True):
+        cur, prev = make_streams(rng, m, k, 0.45, structured)
+        raw = float(jnp.mean((cur == prev).astype(jnp.float32)))
+        for bk in BLOCK_KS:
+            h = float(harvestable_similarity(cur, prev, 1, bk))
+            ratio = h / max(raw, 1e-9)
+            rows.append((structured, bk, raw, h))
+            kind = "structured" if structured else "unstructured"
+            emit(f"granularity/{kind}_bk{bk}", 0.0,
+                 f"raw_sim={raw:.3f};harvest={h:.3f};ratio={ratio:.3f}")
+    emit("granularity/paper_ref", 0.0,
+         "paper: sdot(4-wide) harvests 13.9% of ResNet similarity; "
+         "unstructured tiles collapse the same way, structured channels "
+         "survive wide tiles — compaction path covers the gap")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    main(emit)

@@ -1,0 +1,61 @@
+"""Router stickiness: P[a stream keeps its expert across decode steps].
+
+Grounds the per-(slot, expert) reuse extension (beyond-paper, §Perf cell 2):
+expert weight-tile skipping requires the dispatched stream to revisit the
+same expert — measured here on reduced mixtral with correlated streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.models.layers import apply_norm
+from repro.serve.serve_step import init_serve_state
+from repro.models import forward
+
+
+def main(emit):
+    cfg = ARCHS["mixtral-8x7b"].reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, steps = 4, 16
+
+    state = init_serve_state(cfg, b, 64)
+    anchor = rng.integers(0, cfg.vocab, (b, 1)).astype(np.int32)
+    tok = jnp.asarray(anchor)
+    moe0 = jax.tree.map(lambda x: x[0], params["blocks"])["moe"]
+
+    prev_top = None
+    rows = []
+    for corr in (0.0, 0.6, 0.9):
+        state = init_serve_state(cfg, b, 64)
+        prev_top, agree, n = None, 0, 0
+        for i in range(steps):
+            h, state, _, _ = forward(params, cfg, {"tokens": tok},
+                                     decode_state=state)
+            hn = apply_norm(moe0["norm"], h, cfg.norm_eps).reshape(-1, cfg.d_model)
+            logits = hn.astype(jnp.float32) @ moe0["router"]
+            top = np.asarray(jnp.argsort(logits, axis=-1)[:, -cfg.top_k:])
+            if prev_top is not None:
+                for s_ in range(b):
+                    agree += len(set(top[s_]) & set(prev_top[s_]))
+                    n += cfg.top_k
+            prev_top = top
+            keep = rng.random((b, 1)) < corr
+            nxt = rng.integers(0, cfg.vocab, (b, 1)).astype(np.int32)
+            tok = jnp.asarray(np.where(keep, anchor, nxt).astype(np.int32))
+        pi = agree / max(n, 1)
+        rows.append((corr, pi))
+        emit(f"moe_stickiness/corr{int(corr * 100):02d}", 0.0,
+             f"P(expert kept)={pi:.3f} over {steps} steps, top{cfg.top_k}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    main(emit)

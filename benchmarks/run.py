@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Output: ``name,us_per_call,derived`` CSV rows.
+
+  similarity       Fig. 3 / Fig. 4 / Table I   per-layer input similarity
+  granularity      Sec. III-B                  sdot-vs-mla8 harvest analogue
+  software_reuse   Sec. III                    SW reuse loses; skipping wins
+  speedup          Fig. 10                     measured sweep + modeled TPU
+  per_layer        Fig. 12                     layer pool + saturation
+  energy           Fig. 13/14                  analytic energy reduction
+  kernels          (implementation)            Pallas interpret vs oracle
+  roofline_table   §Roofline deliverable       full cell table -> markdown
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def _run(name, fn, emit):
+    try:
+        fn(emit)
+    except Exception as e:  # keep the harness going; failures are visible
+        emit(f"{name}/FAILED", 0.0, f"{type(e).__name__}: {e}")
+        import traceback
+
+        traceback.print_exc(file=sys.stderr)
+
+
+def main() -> None:
+    from benchmarks import (
+        energy,
+        granularity,
+        kernels as kernel_bench,
+        moe_stickiness,
+        per_layer,
+        roofline_table,
+        similarity,
+        software_reuse,
+        speedup,
+    )
+    from benchmarks.common import emit
+
+    print("name,us_per_call,derived")
+    _run("granularity", granularity.main, emit)
+    _run("software_reuse", software_reuse.main, emit)
+    _run("speedup", speedup.main, emit)
+    _run("per_layer", per_layer.main, emit)
+    _run("energy", energy.main, emit)
+    _run("similarity", similarity.main, emit)
+    _run("moe_stickiness", moe_stickiness.main, emit)
+    _run("kernels", kernel_bench.main, emit)
+    _run("roofline_table", roofline_table.main, emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Paper Fig. 10: end-to-end speedup from computation reuse.
+
+Two views:
+
+1. MEASURED (this host): decode-shaped reuse GEMM (compaction path) vs dense
+   baseline across the similarity sweep — the shape of Fig. 10/12 on real
+   hardware. CPU BLAS stands in for the MXU; the scaling with similarity is
+   the reproduced object, not the absolute ratio.
+
+2. MODELED (TPU v5e target): per-arch decode-step roofline speedup at the
+   paper's Table-I similarity operating points, using the §Roofline cost
+   model with the measured block-skip fraction. The paper's 8x includes a
+   6.4x front-end-bypass component with no TPU analogue (XLA has no
+   fetch/decode front-end); the transferable component is the skipped weight
+   traffic + MACs, reported here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs import ARCHS
+from repro.kernels import ops
+from repro.launch.specs import SHAPES
+from repro.roofline.model_cost import POD_MESH, cell_cost
+
+# Table I similarity per workload class; mapped onto our archs
+PAPER_SIMILARITY = {
+    "qwen3-32b": 0.41,        # ResNet-like uncorrelated: 41%
+    "mixtral-8x7b": 0.45,     # paper's "typical" operating point
+    "rwkv6-7b": 0.68,         # 3DUnet-like sequence workload: 68%
+    "zamba2-2.7b": 0.55,      # Minigo: 55%
+    "gemma3-12b": 0.27,       # DeepSpeech: 27%
+}
+
+
+def measured_sweep(emit):
+    rng = np.random.default_rng(0)
+    m, k, n, bk = 128, 4096, 4096, 256
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    dense = jax.jit(lambda x, w: x @ w)
+    t_dense = time_fn(dense, x, w)
+
+    out = []
+    gk = k // bk
+    for sim in (0.0, 0.25, 0.45, 0.68, 0.9, 0.99):
+        nb = max(int(round(gk * (1 - sim))), 1)
+        kmask = jnp.asarray(
+            (np.arange(gk) < nb).astype(np.int32))
+        delta = jnp.asarray(
+            np.where(np.repeat(np.asarray(kmask), bk)[None, :],
+                     rng.normal(size=(m, k)), 0.0).astype(np.float32))
+        fn = jax.jit(lambda d, w, p, km, nb=nb: ops.reuse_matmul_compact(
+            d, w, p, km, block_k=bk, max_blocks=nb))
+        t = time_fn(fn, delta, w, prev, kmask)
+        speed = t_dense / t
+        out.append((sim, speed))
+        emit(f"speedup/measured_sim{int(sim * 100):02d}", t,
+             f"speedup={speed:.2f}x vs dense {t_dense:.0f}us")
+    return out
+
+
+def modeled_tpu(emit):
+    rows = []
+    for arch, sim in PAPER_SIMILARITY.items():
+        cfg = ARCHS[arch]
+        cell = SHAPES["decode_32k"]
+        base = cell_cost(cfg, cell, POD_MESH)
+        # block-granular harvest: real activation similarity is structured;
+        # granularity.py measures harvest/sim ratios ~0.7-0.9 at block_k=256
+        harvest = 0.8 * sim
+        reuse = cell_cost(cfg, cell, POD_MESH, reuse_skip_fraction=harvest)
+        sp = base.step_s / reuse.step_s
+        rows.append((arch, sim, sp))
+        emit(f"speedup/modeled_tpu_{arch}", base.step_s * 1e6,
+             f"paper_sim={sim};harvest={harvest:.2f};"
+             f"reuse_step_us={reuse.step_s * 1e6:.0f};speedup={sp:.2f}x")
+    return rows
+
+
+def main(emit):
+    a = measured_sweep(emit)
+    b = modeled_tpu(emit)
+    return {"measured": a, "modeled": b}
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    main(emit)

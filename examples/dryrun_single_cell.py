@@ -1,0 +1,29 @@
+"""Lower + compile one production cell (512 virtual devices) and print its
+memory/cost/collective summary — the multi-pod dry-run in miniature.
+
+    python examples/dryrun_single_cell.py --arch rwkv6-7b --shape long_500k
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-7b")
+    ap.add_argument("--shape", default="long_500k")
+    ap.add_argument("--mesh", default="multipod")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell  # sets XLA_FLAGS on import
+
+    rec = run_cell(args.arch, args.shape, args.mesh)
+    rec.pop("traceback", None)
+    print(json.dumps(rec, indent=2)[:4000])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the ReuseSense engine on one linear site, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's algebra in ten lines: cache a site's previous input/output,
+delta-encode the next input, skip zero tiles, and verify the output equals
+the quantized dense GEMM exactly (the telescoping invariant).
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ReuseEngine
+from repro.quant import dequantize_int8, quantize_int8
+
+
+def main():
+    rng = np.random.default_rng(0)
+    engine = ReuseEngine(impl="jnp")
+    engine.register("mlp_in", in_features=1024, out_features=2048,
+                    block_m=8, block_k=128)
+    cache = engine.init_cache(batch=16)
+
+    w = jnp.asarray(rng.normal(size=(1024, 2048)).astype(np.float32) * 0.05)
+    x = jnp.asarray(rng.normal(size=(16, 1024)).astype(np.float32))
+
+    print("step  similarity  skip_fraction  max|reuse - dense|")
+    entry = cache["mlp_in"]
+    for step in range(6):
+        # consecutive inputs share ~70% of values in persistent channel
+        # GROUPS (dead/saturated int8-activation regions persist in
+        # contiguous runs; granularity.py quantifies block-alignment
+        # sensitivity — unaligned similarity harvests ~0 at this tile width)
+        if step:
+            groups = rng.random(1024 // 128) < 0.7
+            channels = np.repeat(groups, 128)
+            x = jnp.asarray(np.where(channels[None, :], np.asarray(x),
+                                     rng.normal(size=(16, 1024))).astype(np.float32))
+        out, entry, stats = engine.apply("mlp_in", x, w, None, entry)
+        xq = dequantize_int8(quantize_int8(x, entry["scale"]), entry["scale"])
+        err = float(jnp.max(jnp.abs(out - xq @ w)))
+        print(f"{step:4d}  {float(stats.similarity):10.3f}  "
+              f"{float(stats.skip_fraction):13.3f}  {err:.2e}")
+
+    print("\nThe skip_fraction column is the fraction of weight tiles whose "
+          "HBM DMA + MXU work the Pallas kernel elides on TPU.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Serving scenario: continuous batching + ReuseSense decode on a reduced
+Mixtral, with per-site similarity stats (the live Fig.-12 analogue).
+
+    PYTHONPATH=src python examples/serve_reuse.py
+
+This is a thin driver over the production CLI path:
+    python -m repro.launch.serve --arch mixtral-8x7b --reduced --reuse
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [
+        "serve", "--arch", "mixtral-8x7b", "--reduced",
+        "--requests", "8", "--batch-slots", "4",
+        "--prompt-len", "24", "--cache-len", "96",
+        "--max-new", "12", "--reuse",
+    ]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end training driver: a ~2M-param qwen3-family model for a few
+hundred steps on CPU, with async checkpointing, a mid-run simulated
+preemption + resume, and a loss-decrease assertion.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200]
+"""
+
+import argparse
+import shutil
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.recovery import LoopConfig, ResilientLoop
+from repro.configs import ARCHS
+from repro.data.pipeline import SyntheticLMSource
+from repro.launch.specs import ShapeCell
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    cfg = ARCHS["qwen3-32b"].reduced()
+    src = SyntheticLMSource(vocab=cfg.vocab, seq_len=128, global_batch=8,
+                            correlation=0.85)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=1e-3),
+        total_steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+        microbatch=2,
+    ))
+
+    def batch_fn(i):
+        return {k: jnp.asarray(v) for k, v in src.batch(i).items()}
+
+    losses = []
+
+    def on_metrics(i, m):
+        losses.append(float(m["loss"]))
+        if i % 20 == 0:
+            print(f"step {i:4d}  loss {losses[-1]:.4f}")
+
+    half = args.steps // 2
+    loop = ResilientLoop(step, batch_fn,
+                         LoopConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25))
+    state = loop.run(init_train_state(cfg, jax.random.PRNGKey(0)), 0, half,
+                     on_metrics=on_metrics)
+    print(f"--- simulated preemption at step {half}; resuming from latest "
+          "checkpoint ---")
+    del state
+
+    loop2 = ResilientLoop(step, batch_fn,
+                          LoopConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25))
+    state, start = loop2.resume_or_init(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    print(f"resumed at step {start}")
+    loop2.run(state, start, args.steps - start, on_metrics=on_metrics)
+
+    print(f"\nloss {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps")
+    assert losses[-1] < losses[0] - 0.3, "training must make clear progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

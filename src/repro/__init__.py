@@ -1,0 +1,14 @@
+"""repro: ReuseSense on TPU — delta computation-reuse DNN framework in JAX.
+
+Reproduction and TPU-native extension of:
+  "ReuseSense: With Great Reuse Comes Greater Efficiency; Effectively
+   Employing Computation Reuse on General-Purpose CPUs" (UPC, cs.AR 2023).
+
+Public API surface:
+  repro.core      — the reuse engine (delta encode, block-skip matmul, policy)
+  repro.models    — composable pure-JAX model zoo (10 assigned architectures)
+  repro.configs   — exact public configs per architecture
+  repro.launch    — production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "0.1.0"

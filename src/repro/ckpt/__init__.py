@@ -1,0 +1,13 @@
+from repro.ckpt.checkpoint import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.ckpt.recovery import LoopConfig, ResilientLoop
+
+__all__ = [
+    "AsyncCheckpointer", "LoopConfig", "ResilientLoop", "gc_checkpoints",
+    "latest_step", "restore_checkpoint", "save_checkpoint",
+]

@@ -1,0 +1,25 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16 experts top-1
+with a shared expert (early-fusion multimodal family; text backbone here).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    attn_kind="full",
+    mlp_kind="swiglu",
+    n_experts=16,
+    top_k=1,
+    shared_expert=True,
+    rope="rope",
+    rope_theta=500000.0,
+)

@@ -1,0 +1,34 @@
+from repro.core.delta import DeltaEncoding, delta_encode, delta_encode_int8
+from repro.core.engine import ReuseEngine
+from repro.core.policy import ReusePolicy
+from repro.core.reuse_cache import (
+    ReuseSiteSpec,
+    cache_bytes,
+    init_reuse_cache,
+    init_site_cache,
+)
+from repro.core.reuse_linear import ReuseStats, reuse_linear
+from repro.core.similarity import (
+    block_zero_mask,
+    code_similarity,
+    harvestable_similarity,
+    similarity_breakdown,
+)
+
+__all__ = [
+    "DeltaEncoding",
+    "ReuseEngine",
+    "ReusePolicy",
+    "ReuseSiteSpec",
+    "ReuseStats",
+    "block_zero_mask",
+    "cache_bytes",
+    "code_similarity",
+    "delta_encode",
+    "delta_encode_int8",
+    "harvestable_similarity",
+    "init_reuse_cache",
+    "init_site_cache",
+    "reuse_linear",
+    "similarity_breakdown",
+]

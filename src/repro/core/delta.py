@@ -1,0 +1,104 @@
+"""Delta encoding (paper Eqns. 2-4) and the overflow-split trick (Sec. IV-B).
+
+    Δ = I_c − I_p            (in the int8 code domain)
+    O_c = O_p + Δ · W
+
+Two arithmetic paths:
+
+* **float path** — deltas are dequantized (scale · (q_c − q_p)) and the ΔW GEMM
+  runs in bf16 with f32 accumulation. Zero codes ⇒ exactly-zero bf16 deltas, so
+  tile skipping is exact. This is the default inside the models.
+
+* **int8 path** — the paper-faithful quantized pipeline. The difference of two
+  int8 codes spans [−254, 254]; the paper splits an overflowing delta into two
+  in-range components and issues two MACs (measured < 0.01 % of values). We do
+  the same: Δ = lo + hi with lo = clip(Δ, −127, 127), hi = Δ − lo (|hi| ≤ 127).
+  The hi component is almost entirely zeros, so its GEMM hits the same
+  block-skip machinery and costs ~nothing — the overflow handling *is* a reuse
+  call.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import block_zero_mask
+
+
+class DeltaEncoding(NamedTuple):
+    """Delta between consecutive quantized activations of one reuse site."""
+
+    delta: jax.Array       # float (dequantized) delta, [M, K]
+    cur_q: jax.Array       # int8 codes of the current input, [M, K]
+    block_mask: jax.Array  # int32 [gm, gk]; 1 = tile must be computed
+    skip_fraction: jax.Array  # scalar: fraction of skippable tiles
+
+
+def delta_encode(
+    x: jax.Array,
+    prev_q: jax.Array,
+    scale: jax.Array,
+    *,
+    block_m: int,
+    block_k: int,
+    compute_dtype=jnp.bfloat16,
+) -> DeltaEncoding:
+    """Quantize the current input, form the exact float delta and its tile mask."""
+    from repro.quant import quantize_int8
+
+    cur_q = quantize_int8(x, scale)
+    dq = cur_q.astype(jnp.int32) - prev_q.astype(jnp.int32)
+    delta = (dq.astype(jnp.float32) * scale).astype(compute_dtype)
+    mask = block_zero_mask(dq, block_m, block_k)
+    skip = 1.0 - jnp.mean(mask.astype(jnp.float32))
+    return DeltaEncoding(delta=delta, cur_q=cur_q, block_mask=mask, skip_fraction=skip)
+
+
+class Int8Delta(NamedTuple):
+    lo: jax.Array          # int8 [M, K]
+    hi: jax.Array          # int8 [M, K]; nonzero only at overflow positions
+    lo_mask: jax.Array     # int32 [gm, gk]
+    hi_mask: jax.Array     # int32 [gm, gk] (≈ all zeros ⇒ hi GEMM ≈ free)
+    has_overflow: jax.Array  # scalar bool
+
+
+def delta_encode_int8(
+    cur_q: jax.Array, prev_q: jax.Array, *, block_m: int, block_k: int
+) -> Int8Delta:
+    """Paper-faithful int8 delta with the overflow split (Sec. IV-B)."""
+    dq = cur_q.astype(jnp.int32) - prev_q.astype(jnp.int32)
+    lo = jnp.clip(dq, -127, 127)
+    hi = dq - lo  # |hi| <= 127 because |dq| <= 254
+    return Int8Delta(
+        lo=lo.astype(jnp.int8),
+        hi=hi.astype(jnp.int8),
+        lo_mask=block_zero_mask(lo, block_m, block_k),
+        hi_mask=block_zero_mask(hi, block_m, block_k),
+        has_overflow=jnp.any(hi != 0),
+    )
+
+
+def compact_block_indices(block_mask_row: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Indices of the nonzero K-blocks of one M-row-block, front-compacted.
+
+    Returns (indices [gk], count). indices[i] for i < count are the nonzero
+    block ids in order; the tail repeats the last valid id (harmless gathers).
+    Used by the compaction GEMM path (beyond-paper, MegaBlocks-style).
+    """
+    gk = block_mask_row.shape[0]
+    nz = block_mask_row != 0
+    count = jnp.sum(nz.astype(jnp.int32))
+    # Stable front-compaction: position of each nonzero in the compacted order.
+    order = jnp.cumsum(nz.astype(jnp.int32)) - 1
+    idx = jnp.full((gk,), 0, dtype=jnp.int32)
+    idx = idx.at[jnp.where(nz, order, gk - 1)].set(
+        jnp.arange(gk, dtype=jnp.int32), mode="drop"
+    )
+    # Clamp the tail to the last valid entry (or 0 when count == 0).
+    last = jnp.maximum(count - 1, 0)
+    tail_fill = idx[last]
+    idx = jnp.where(jnp.arange(gk) < count, idx, tail_fill)
+    return idx, count

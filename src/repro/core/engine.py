@@ -1,0 +1,114 @@
+"""ReuseEngine — site registry + dispatch (the CRS instruction analogue).
+
+The paper's flow: the framework prepares a parameter structure (addresses,
+lengths, kernelMode, dataflow) and issues `crs` per layer/tile; ReuseSensor
+generates the kernel. Here:
+
+* `register(...)` declares a reuse site (one per unique linear op; sites used
+  inside scan-over-layers carry a leading layer dimension in their cache);
+* `init_cache(batch)` builds the cache pytree threaded through serve_step;
+* `apply(...)` executes one site — the crs call;
+* `refresh_modes(cache)` is the host-side policy pass between steps.
+
+The engine itself is static configuration; all mutable state lives in the
+cache pytree so steps stay pure and jit/pjit-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ReusePolicy
+from repro.core.reuse_cache import ReuseSiteSpec, init_site_cache
+from repro.core.reuse_linear import ReuseStats, reuse_linear
+
+
+@dataclasses.dataclass
+class ReuseEngine:
+    policy: ReusePolicy = dataclasses.field(default_factory=ReusePolicy)
+    impl: str = "jnp"
+    sites: dict[str, ReuseSiteSpec] = dataclasses.field(default_factory=dict)
+    # current kernelMode per site; refreshed host-side between steps
+    modes: dict[str, str] = dataclasses.field(default_factory=dict)
+    # per-site leading layer count (0 = unstacked site)
+    stacking: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def register(
+        self,
+        name: str,
+        in_features: int,
+        out_features: int,
+        *,
+        n_layers: int = 0,
+        block_m: int = 8,
+        block_k: int = 256,
+        mode: str = "auto",
+    ) -> ReuseSiteSpec:
+        dataflow = self.policy.decide_dataflow(in_features, out_features)
+        spec = ReuseSiteSpec(
+            name=name,
+            in_features=in_features,
+            out_features=out_features,
+            block_m=block_m,
+            block_k=block_k,
+            mode=mode,
+            dataflow=dataflow,
+        )
+        self.sites[name] = spec
+        self.stacking[name] = n_layers
+        # Start optimistic (paper's default is reuse-on); policy may demote.
+        self.modes[name] = "reuse" if mode == "auto" else mode
+        return spec
+
+    def init_cache(self, batch: int) -> dict[str, Any]:
+        cache: dict[str, Any] = {}
+        for name, spec in self.sites.items():
+            entry = init_site_cache(spec, batch)
+            n_layers = self.stacking[name]
+            if n_layers:
+                entry = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n_layers, *x.shape)).copy(),
+                    entry,
+                )
+            cache[name] = entry
+        return cache
+
+    def apply(
+        self,
+        name: str,
+        x: jax.Array,
+        w: jax.Array,
+        b: jax.Array | None,
+        cache_entry: dict[str, jax.Array],
+    ) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
+        spec = self.sites[name]
+        return reuse_linear(
+            x, w, b, cache_entry, spec, mode=self.modes[name], impl=self.impl
+        )
+
+    def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
+        """Host-side policy pass: read sim_ema out of the cache, re-decide
+        kernelMode per site. Returns the sites whose mode changed."""
+        changed = {}
+        for name, spec in self.sites.items():
+            ema = cache[name]["sim_ema"]
+            ema_val = float(jnp.mean(ema))  # stacked sites: mean over layers
+            new_mode = self.policy.decide_mode(spec, ema_val)
+            if new_mode != self.modes[name]:
+                self.modes[name] = new_mode
+                changed[name] = new_mode
+        return changed
+
+    def site_summary(self, cache: dict[str, Any]) -> dict[str, dict[str, float]]:
+        out = {}
+        for name in self.sites:
+            out[name] = {
+                "sim_ema": float(jnp.mean(cache[name]["sim_ema"])),
+                "mode": self.modes[name],
+                "steps": int(jnp.max(cache[name]["steps"])),
+            }
+        return out

@@ -1,0 +1,138 @@
+"""Per-(slot, expert) delta reuse for routed MoE — the beyond-paper extension.
+
+DESIGN.md §8 / EXPERIMENTS.md §Perf cell 2: the paper-faithful engine excludes
+routed experts (a stream's expert assignment changes between steps, breaking
+the consecutive-evaluation premise). But measured router stickiness is high
+(0.61–0.98), and the cold-start identity — reuse output == quantized dense on
+a lane's first touch — makes expert *switches* numerically safe. So each
+decode slot keeps one cache lane PER EXPERT:
+
+    prev_q   [E, B, d]      int8 codes of the last input slot b sent to e
+    prev_hi  [E, B, 2f]     wi output for that input (pre-activation)
+    prev_act [E, B, f]      activation codes feed the wo site the same way
+    prev_out [E, B, d]      wo output
+
+Both expert linears are reuse sites. Exactness chain: if slot b revisits
+expert e and its input codes match, Δ = 0 ⇒ hi unchanged ⇒ activation
+unchanged ⇒ out unchanged — and partial block matches skip exactly those
+weight tiles (same ΔW algebra, batched over experts).
+
+HBM accounting (what the §Perf model charges): weight-tile traffic on wi/wo
+scales by (1 − stickiness·harvest); the cache adds E× lanes of activations
+(MBs) against GBs of expert weights.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.similarity import block_zero_mask
+from repro.models.layers import apply_norm
+from repro.quant import quantize_int8
+
+
+class ExpertReuseStats(NamedTuple):
+    sticky_fraction: jax.Array   # P[slot kept its top-1 expert this step]
+    wi_skip: jax.Array           # fraction of wi weight tiles skipped
+    wo_skip: jax.Array
+
+
+def init_expert_reuse_cache(cfg: ModelConfig, batch: int) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    n_layers = cfg.n_superblocks
+    def stack(x):
+        return jnp.broadcast_to(x, (n_layers, *x.shape)).copy()
+    return {
+        "prev_q": stack(jnp.zeros((e, batch, d), jnp.int8)),
+        "prev_hi": stack(jnp.zeros((e, batch, 2 * f), jnp.float32)),
+        "prev_act_q": stack(jnp.zeros((e, batch, f), jnp.int8)),
+        "prev_out": stack(jnp.zeros((e, batch, d), jnp.float32)),
+        "scale": jnp.asarray(0.05, jnp.float32),
+        "act_scale": jnp.asarray(0.05, jnp.float32),
+    }
+
+
+def layer_slice(cache: dict, i: int) -> dict:
+    """One layer's lane view of the stacked cache (scales pass through)."""
+    return {
+        k: (v if k in ("scale", "act_scale") else v[i])
+        for k, v in cache.items()
+    }
+
+
+def moe_reuse_forward(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,            # [B, 1, d] decode tokens
+    cache: dict,             # one layer's slice of init_expert_reuse_cache
+    *,
+    block_k: int = 128,
+) -> tuple[jax.Array, dict, ExpertReuseStats]:
+    """Decode-step MoE with per-(slot, expert) delta reuse. Top-1 routing on
+    the reuse path (top-k generalizes by running k passes); returns
+    (out [B,1,d], new_cache, stats)."""
+    b, s, d = x.shape
+    assert s == 1, "expert reuse is a decode-step feature"
+    e, f = cfg.n_experts, cfg.d_ff
+    h = apply_norm(p["norm"], x, cfg.norm_eps).reshape(b, d)
+
+    logits = jnp.einsum("bd,de->be", h.astype(jnp.float32), p["router"])
+    top_e = jnp.argmax(logits, axis=-1)                      # [B]
+    gate = jax.nn.softmax(logits, axis=-1)[jnp.arange(b), top_e]
+
+    scale = cache["scale"]
+    act_scale = cache["act_scale"]
+
+    # ---- wi site: Δ against this (slot, expert) lane ----
+    cur_q = quantize_int8(h, scale)                          # [B, d]
+    lane_prev_q = cache["prev_q"][top_e, jnp.arange(b)]      # [B, d]
+    dq = cur_q.astype(jnp.int32) - lane_prev_q.astype(jnp.int32)
+    delta = (dq.astype(jnp.float32) * scale)                 # [B, d]
+    wi_mask = block_zero_mask(dq, 1, block_k)                # [B, d/bk]
+
+    wi_b = p["wi"][top_e]                                    # [B, d, 2f]
+    hi = cache["prev_hi"][top_e, jnp.arange(b)] + jnp.einsum(
+        "bd,bdf->bf", delta, wi_b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                                        # [B, 2f]
+
+    gate_h, up = jnp.split(hi, 2, axis=-1)
+    act = jax.nn.silu(gate_h) * up                           # [B, f]
+
+    # ---- wo site: Δ of the activation codes, same lanes ----
+    act_q = quantize_int8(act, act_scale)
+    lane_prev_act = cache["prev_act_q"][top_e, jnp.arange(b)]
+    dq2 = act_q.astype(jnp.int32) - lane_prev_act.astype(jnp.int32)
+    delta2 = dq2.astype(jnp.float32) * act_scale
+    wo_mask = block_zero_mask(dq2, 1, block_k)
+
+    wo_b = p["wo"][top_e]                                    # [B, f, d]
+    out = cache["prev_out"][top_e, jnp.arange(b)] + jnp.einsum(
+        "bf,bfd->bd", delta2, wo_b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                                        # [B, d]
+
+    # ---- cache update: only the visited (expert, slot) lanes ----
+    idx = (top_e, jnp.arange(b))
+    new_cache = dict(
+        cache,
+        prev_q=cache["prev_q"].at[idx].set(cur_q),
+        prev_hi=cache["prev_hi"].at[idx].set(hi),
+        prev_act_q=cache["prev_act_q"].at[idx].set(act_q),
+        prev_out=cache["prev_out"].at[idx].set(out),
+    )
+
+    # stickiness measured against the lane actually used last step: a lane
+    # whose codes fully match implies the stream revisited "warm" state
+    sticky = jnp.mean((jnp.sum(wi_mask, axis=-1) == 0).astype(jnp.float32))
+    stats = ExpertReuseStats(
+        sticky_fraction=sticky,
+        wi_skip=1.0 - jnp.mean(wi_mask.astype(jnp.float32)),
+        wo_skip=1.0 - jnp.mean(wo_mask.astype(jnp.float32)),
+    )
+    final = (out * gate[:, None]).reshape(b, 1, d).astype(x.dtype)
+    return final, new_cache, stats

@@ -1,0 +1,47 @@
+"""ReusePolicy — the kernelMode decision logic (paper Sec. IV + Fig. 12).
+
+Fig. 12 shows reuse can *regress* for layers with low input similarity or
+small sizes (delta/cache bookkeeping isn't amortized). The paper exposes a
+per-call `kernelMode` flag and leaves mode selection to the framework. We make
+the selection explicit: a site runs in reuse mode iff
+
+    sim_ema >= threshold   and   M·K·N work >= min_work
+
+Mode decisions are taken *between* jitted steps (host-side, from the sim_ema
+carried in the cache pytree), so a mode flip recompiles rather than bloating
+the step HLO with both branches — the analogue of the paper re-invoking CRS
+with a different parameter block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.reuse_cache import ReuseSiteSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ReusePolicy:
+    # Below ~20 % similarity the paper's own data shows little or negative
+    # gain (Fig. 12 layers A-C); tiles need even more headroom.
+    sim_threshold: float = 0.20
+    # Small sites aren't worth the bookkeeping (paper: "even if the input
+    # similarity is high for small layers, we see little gains").
+    min_work_flops: float = 2**24
+    dataflow_output_bias: float = 1.0  # >1 prefers output-stationary
+
+    def decide_mode(self, spec: ReuseSiteSpec, sim_ema: float) -> str:
+        if spec.mode in ("reuse", "basic"):
+            return spec.mode  # explicit kernelMode wins
+        work = 2.0 * spec.in_features * spec.out_features
+        if work < self.min_work_flops:
+            return "basic"
+        return "reuse" if sim_ema >= self.sim_threshold else "basic"
+
+    def decide_dataflow(self, in_features: int, out_features: int) -> str:
+        """Paper Sec. VI-A: 3DUnet's large-input/small-output GEMMs regress
+        under input-stationary; prefer output-stationary unless the aspect
+        ratio strongly favours holding inputs."""
+        if in_features > self.dataflow_output_bias * 4 * out_features:
+            return "input"
+        return "output"

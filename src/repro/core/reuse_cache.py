@@ -1,0 +1,64 @@
+"""ReuseCache — the TPU analogue of ReuseSensor's scratchpad + parameter table.
+
+The paper's hardware caches, per layer: the previous input vector, the previous
+outputs, and kernel parameters (addresses, lengths, kernelMode flag, dataflow).
+Here each *reuse site* (one linear op in the network) owns a cache entry:
+
+    prev_q   : int8  [M, K]  — previous input, quantized codes
+    prev_out : f32   [M, N]  — previous output (pre-activation)
+    scale    : f32   scalar  — activation quant scale for this site
+    sim_ema  : f32   scalar  — running code-similarity estimate (policy input)
+    steps    : i32   scalar  — number of evaluations seen (0 ⇒ cold, run dense)
+
+Caches are a plain pytree threaded through `serve_step` exactly like a KV
+cache, so they shard, donate, and checkpoint with the rest of the state. M is
+the (fixed) serving batch; per-slot streams are compared against their own
+previous evaluation, matching the paper's "consecutive evaluations of a layer".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ReuseSiteSpec:
+    """Static description of one reuse site (the CRS parameter-table analogue)."""
+
+    name: str
+    in_features: int
+    out_features: int
+    block_m: int = 8
+    block_k: int = 256
+    # kernelMode in the paper: "reuse" | "basic"; "auto" lets the policy decide
+    # per call from sim_ema.
+    mode: str = "auto"
+    # "output" | "input" stationary — kernel grid iteration order.
+    dataflow: str = "output"
+    fixed_scale: float = 0.05  # activation scale; sites may recalibrate
+
+
+def init_site_cache(spec: ReuseSiteSpec, batch: int) -> dict[str, jax.Array]:
+    return {
+        "prev_q": jnp.zeros((batch, spec.in_features), dtype=jnp.int8),
+        "prev_out": jnp.zeros((batch, spec.out_features), dtype=jnp.float32),
+        "scale": jnp.asarray(spec.fixed_scale, dtype=jnp.float32),
+        "sim_ema": jnp.zeros((), dtype=jnp.float32),
+        "steps": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+def init_reuse_cache(
+    specs: dict[str, ReuseSiteSpec], batch: int
+) -> dict[str, dict[str, jax.Array]]:
+    """Cache pytree for a whole model: {site_name: entry}."""
+    return {name: init_site_cache(spec, batch) for name, spec in specs.items()}
+
+
+def cache_bytes(cache: Any) -> int:
+    """Total HBM footprint of a reuse cache (reported in benchmarks)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

@@ -1,0 +1,111 @@
+"""reuse_linear — one reuse site: O_c = O_p + Δ·W (paper Eqns. 2-4).
+
+Cold-start needs no branch: caches initialize to prev_q = 0, prev_out = 0, so
+the first evaluation degenerates to O = dequant(quantize(x))·W — the ordinary
+quantized GEMM. Every subsequent evaluation telescopes:
+
+    O_t = Σ_{i<=t} Δ_i · W = dequant(q_t) · W        (exactly, in int32;
+                                                      to f32 rounding in float)
+
+so the reuse output always equals the quantized dense output — the central
+correctness invariant, property-tested in tests/test_reuse_properties.py.
+
+Reuse is an *inference* feature (the paper's setting): models enable it on
+decode-step linear sites, where M = serving batch and the GEMM is deeply
+memory-bound — precisely where skipping weight-tile DMAs pays.
+
+`impl` selects the execution substrate:
+    "jnp"              — pure-jnp semantics (fast on CPU; what the dry-run lowers)
+    "pallas_interpret" — the real kernels, interpreted on CPU (tests)
+    "pallas"           — the real kernels, compiled for TPU (target hardware)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import delta_encode
+from repro.core.reuse_cache import ReuseSiteSpec
+from repro.core.similarity import code_similarity, ema_update
+from repro.kernels import ops
+
+
+class ReuseStats(NamedTuple):
+    similarity: jax.Array     # code-level similarity this call
+    skip_fraction: jax.Array  # fraction of weight tiles skipped this call
+
+
+def reuse_linear(
+    x: jax.Array,                       # [..., K]
+    w: jax.Array,                       # [K, N]
+    b: jax.Array | None,
+    cache: dict[str, jax.Array],
+    spec: ReuseSiteSpec,
+    *,
+    mode: str = "reuse",                # "reuse" | "basic"  (kernelMode flag)
+    impl: str = "jnp",
+    ema_decay: float = 0.9,
+) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    xm = x.reshape(-1, k)
+    m = xm.shape[0]
+    assert cache["prev_q"].shape == (m, k), (cache["prev_q"].shape, (m, k))
+
+    if mode == "basic":
+        # ReuseSensor+ReuseOFF: the generated basic kernel (Fig. 7-A) — plain
+        # quantized GEMM, no delta/cache bookkeeping beyond refreshing state.
+        from repro.quant import dequantize_int8, quantize_int8
+
+        cur_q = quantize_int8(xm, cache["scale"])
+        out = jnp.dot(
+            dequantize_int8(cur_q, cache["scale"], dtype=xm.dtype),
+            w,
+            preferred_element_type=jnp.float32,
+        )
+        sim = code_similarity(cur_q, cache["prev_q"])
+        new_cache = dict(
+            cache,
+            prev_q=cur_q,
+            prev_out=out,
+            sim_ema=ema_update(cache["sim_ema"], sim, ema_decay),
+            steps=cache["steps"] + 1,
+        )
+        stats = ReuseStats(similarity=sim, skip_fraction=jnp.zeros(()))
+    elif mode == "reuse":
+        enc = delta_encode(
+            xm, cache["prev_q"], cache["scale"],
+            block_m=spec.block_m, block_k=spec.block_k,
+            compute_dtype=w.dtype,
+        )
+        if impl == "jnp":
+            out = ops.reuse_matmul_ref(
+                enc.delta, w, cache["prev_out"], enc.block_mask,
+                spec.block_m, spec.block_k,
+            )
+        else:
+            out = ops.reuse_matmul(
+                enc.delta, w, cache["prev_out"], enc.block_mask,
+                block_m=spec.block_m, block_k=spec.block_k,
+                dataflow=spec.dataflow,
+                interpret=(impl == "pallas_interpret"),
+            )
+        sim = code_similarity(enc.cur_q, cache["prev_q"])
+        new_cache = dict(
+            cache,
+            prev_q=enc.cur_q,
+            prev_out=out,
+            sim_ema=ema_update(cache["sim_ema"], sim, ema_decay),
+            steps=cache["steps"] + 1,
+        )
+        stats = ReuseStats(similarity=sim, skip_fraction=enc.skip_fraction)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out.astype(x.dtype).reshape(*lead, n), new_cache, stats

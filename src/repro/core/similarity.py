@@ -1,0 +1,73 @@
+"""Input-similarity measurement (paper Sec. II-B / III-A, Figs. 3 & 4).
+
+Similarity between two consecutive evaluations of a layer is the fraction of
+*identical* values at matching positions, measured in the quantized (int8 code)
+domain. Fig. 4 of the paper further splits similarity into positions where both
+codes are zero vs. identical-nonzero; squared-ReLU / ReLU archs are dominated by
+the zero component, GLU archs by the nonzero component.
+
+We additionally implement the *granularity* analysis: the paper shows the SVE
+`sdot` instruction can only skip when a whole 4-element sub-vector of deltas is
+zero (only 13.9 % of ResNet's raw similarity is harvestable at that
+granularity), motivating the per-scalar `mla8`. On TPU the skip granularity is
+a (block_m × block_k) tile, so `harvestable_similarity` reports the fraction of
+tiles that are entirely unchanged — the TPU analogue of that study.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def code_similarity(cur_q: jax.Array, prev_q: jax.Array) -> jax.Array:
+    """Fraction of positions whose int8 codes are identical. Scalar in [0, 1]."""
+    return jnp.mean((cur_q == prev_q).astype(jnp.float32))
+
+
+def similarity_breakdown(cur_q: jax.Array, prev_q: jax.Array) -> dict[str, jax.Array]:
+    """Fig.-4 split: identical-and-zero vs identical-and-nonzero fractions."""
+    same = cur_q == prev_q
+    zero = same & (cur_q == 0)
+    nonzero = same & (cur_q != 0)
+    n = cur_q.size
+    return {
+        "similarity": jnp.sum(same) / n,
+        "zero_similarity": jnp.sum(zero) / n,
+        "nonzero_similarity": jnp.sum(nonzero) / n,
+    }
+
+
+def block_zero_mask(
+    delta: jax.Array, block_m: int, block_k: int
+) -> jax.Array:
+    """Per-tile "any element changed" mask for a [M, K] delta tensor.
+
+    Returns int32 [ceil(M/bm), ceil(K/bk)] — 1 where the tile has ANY nonzero
+    delta (must be computed), 0 where the whole tile is unchanged (skippable).
+    M/K are padded virtually; padding positions count as unchanged.
+    """
+    m, k = delta.shape
+    pm = (-m) % block_m
+    pk = (-k) % block_k
+    if pm or pk:
+        delta = jnp.pad(delta, ((0, pm), (0, pk)))
+    gm, gk = delta.shape[0] // block_m, delta.shape[1] // block_k
+    tiles = delta.reshape(gm, block_m, gk, block_k)
+    any_nz = jnp.any(tiles != 0, axis=(1, 3))
+    return any_nz.astype(jnp.int32)
+
+
+def harvestable_similarity(
+    cur_q: jax.Array, prev_q: jax.Array, block_m: int, block_k: int
+) -> jax.Array:
+    """Fraction of (bm × bk) tiles fully unchanged — similarity usable at tile
+    granularity (paper: 'all deltas in the sub-vector must be zero')."""
+    delta = cur_q.astype(jnp.int32) - prev_q.astype(jnp.int32)
+    mask = block_zero_mask(delta, block_m, block_k)
+    return 1.0 - jnp.mean(mask.astype(jnp.float32))
+
+
+def ema_update(stat: jax.Array, obs: jax.Array, decay: float) -> jax.Array:
+    """Running similarity estimate used by the reuse policy (engine state)."""
+    return decay * stat + (1.0 - decay) * obs

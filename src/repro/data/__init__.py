@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticAudioSource,
+    SyntheticLMSource,
+    make_source,
+)
+
+__all__ = ["SyntheticAudioSource", "SyntheticLMSource", "make_source"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the ΔW reuse GEMM.
+
+  reuse_matmul.py      — block-skip ΔW GEMM (ReuseSensor analogue; skips the
+                         HBM→VMEM weight-tile DMA and the MXU op per zero tile)
+  reuse_matmul_int8.py — int8×int8→int32 variant (the mla8 analogue)
+  delta_quant.py       — fused quantize + delta + tile-mask pass
+  wkv6_decode.py       — fused RWKV6 decode step (one state pass instead of
+                         four; the rwkv6 batched-decode hot-spot)
+  ops.py               — jit'd public wrappers (padding, path dispatch)
+  ref.py               — pure-jnp oracles
+"""

@@ -1,0 +1,169 @@
+"""Public kernel API: padding, batch flattening, path dispatch.
+
+Paths (per DESIGN.md §2):
+  "kernel"  — Pallas block-skip GEMM (structural skipping; TPU target,
+              interpret=True on CPU).
+  "compact" — gather the nonzero K-blocks of Δ and the matching W row-blocks,
+              dense GEMM on the compacted operands (MegaBlocks-style;
+              beyond-paper). Pure jnp, shardable under pjit, and the path the
+              CPU wall-clock benchmarks measure.
+  "masked"  — branchless jnp.where software reuse (the paper's Sec.-III
+              negative result: costs MORE than dense — kept as a benchmark).
+  "dense"   — O_p-free ordinary GEMM (the "basic kernel" / reuse-OFF mode).
+  "ref"     — oracle (tests only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import compact_block_indices
+from repro.kernels import ref as _ref
+from repro.kernels.delta_quant import delta_quant as delta_quant_kernel
+from repro.kernels.reuse_matmul import reuse_matmul as _reuse_matmul_kernel
+from repro.kernels.reuse_matmul_int8 import reuse_matmul_int8 as _reuse_matmul_int8
+
+__all__ = [
+    "reuse_matmul",
+    "reuse_matmul_compact",
+    "reuse_matmul_masked",
+    "delta_quant_fused",
+    "reuse_matmul_int8",
+]
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def reuse_matmul(
+    delta: jax.Array,
+    w: jax.Array,
+    prev_out: jax.Array,
+    block_mask: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    dataflow: str = "output",
+    interpret: bool = True,
+) -> jax.Array:
+    """Padded/validated entry to the Pallas block-skip kernel."""
+    m, n = prev_out.shape
+    dp = _pad_to(delta, block_m, block_k)
+    wp = _pad_to(w, block_k, block_n)
+    pp = _pad_to(prev_out.astype(jnp.float32), block_m, block_n)
+    gm, gk = dp.shape[0] // block_m, dp.shape[1] // block_k
+    assert block_mask.shape == (gm, gk), (block_mask.shape, (gm, gk))
+    out = _reuse_matmul_kernel(
+        dp, wp, pp, block_mask,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        dataflow=dataflow, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+def reuse_matmul_int8(
+    delta_q: jax.Array,
+    w_q: jax.Array,
+    prev_acc: jax.Array,
+    block_mask: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    m, n = prev_acc.shape
+    dp = _pad_to(delta_q, block_m, block_k)
+    wp = _pad_to(w_q, block_k, block_n)
+    pp = _pad_to(prev_acc, block_m, block_n)
+    out = _reuse_matmul_int8(
+        dp, wp, pp, block_mask,
+        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
+    )
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "max_blocks"))
+def reuse_matmul_compact(
+    delta: jax.Array,       # [M, K]
+    w: jax.Array,           # [K, N]
+    prev_out: jax.Array,    # [M, N]
+    k_block_mask: jax.Array,  # [gk] int32 — per-K-block "any row changed"
+    *,
+    block_k: int = 256,
+    max_blocks: int | None = None,
+) -> jax.Array:
+    """Compaction path: gather nonzero K-blocks of Δ and W, dense GEMM.
+
+    Shared-K masking (one mask bit per K-block across all rows) keeps the
+    gather a clean 2-D slice gather that GSPMD shards on the N axis. With
+    `max_blocks` static (< gk) the GEMM shape shrinks — the static-shape
+    budget mode used for the roofline study; by default all gk blocks are
+    gathered (shape-stable, value-exact, savings appear as skipped DMAs only
+    on real hardware via the kernel path).
+    """
+    mrows, k = delta.shape
+    gk = k // block_k
+    assert k % block_k == 0
+    idx, count = compact_block_indices(k_block_mask)
+    nb = max_blocks if max_blocks is not None else gk
+    idx = idx[:nb]
+    # Zero-weight blocks beyond `count` so the tail contributes nothing even
+    # when it aliases a real block.
+    valid = (jnp.arange(nb) < count).astype(delta.dtype)
+    d_blocks = delta.reshape(mrows, gk, block_k).transpose(1, 0, 2)[idx]
+    d_blocks = d_blocks * valid[:, None, None]
+    w_blocks = w.reshape(gk, block_k, -1)[idx]
+    # [nb, M, bk] × [nb, bk, N] — contract over (blocks, bk) at once.
+    upd = jnp.einsum(
+        "gmk,gkn->mn", d_blocks, w_blocks,
+        preferred_element_type=jnp.float32,
+    )
+    return prev_out + upd
+
+
+def reuse_matmul_masked(
+    delta: jax.Array, w: jax.Array, prev_out: jax.Array
+) -> jax.Array:
+    """Software reuse, branchless: the Sec.-III negative result on TPU.
+
+    Masks deltas with `where` but still issues the full GEMM — all the delta
+    bookkeeping, none of the skipping. Benchmarked to show it is *slower*
+    than the dense baseline, reproducing the paper's motivation.
+    """
+    d = jnp.where(delta != 0, delta, jnp.zeros_like(delta))
+    return prev_out + jnp.dot(d, w, preferred_element_type=jnp.float32)
+
+
+def delta_quant_fused(
+    x: jax.Array,
+    prev_q: jax.Array,
+    scale: jax.Array,
+    *,
+    block_m: int = 128,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Padded entry to the fused delta/quant/mask kernel."""
+    m, k = x.shape
+    xp = _pad_to(x, block_m, block_k)
+    pq = _pad_to(prev_q, block_m, block_k)
+    q, delta, mask = delta_quant_kernel(
+        xp, pq, scale, block_m=block_m, block_k=block_k, interpret=interpret
+    )
+    return q[:m, :k], delta[:m, :k], mask
+
+
+# Re-exported oracles so tests import one module.
+reuse_matmul_ref = _ref.reuse_matmul_ref
+reuse_matmul_int8_ref = _ref.reuse_matmul_int8_ref
+delta_quant_ref = _ref.delta_quant_ref

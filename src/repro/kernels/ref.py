@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests).
+
+The oracle for the block-skip ΔW GEMM applies the *mask semantics* explicitly:
+tiles whose mask bit is 0 contribute nothing (the kernel never loads them).
+When the mask is derived from the delta (its only legitimate producer), masked
+tiles are all-zero anyway, so the oracle equals `prev_out + delta @ w` — the
+property tests assert both facts independently.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_block_mask(
+    block_mask: jax.Array, m: int, k: int, block_m: int, block_k: int
+) -> jax.Array:
+    """[gm, gk] tile mask -> [M, K] elementwise {0,1} float mask."""
+    em = jnp.repeat(block_mask, block_m, axis=0)[:m]
+    return jnp.repeat(em, block_k, axis=1)[:, :k].astype(jnp.float32)
+
+
+def reuse_matmul_ref(
+    delta: jax.Array,       # [M, K] float
+    w: jax.Array,           # [K, N] float
+    prev_out: jax.Array,    # [M, N] f32
+    block_mask: jax.Array,  # [gm, gk] int32; 1 = compute tile
+    block_m: int,
+    block_k: int,
+) -> jax.Array:
+    """O_c = O_p + (Δ ⊙ mask) @ W with f32 accumulation."""
+    m, k = delta.shape
+    emask = expand_block_mask(block_mask, m, k, block_m, block_k)
+    d = delta.astype(jnp.float32) * emask
+    return prev_out + jax.lax.dot(d, w.astype(jnp.float32),
+                                  precision=jax.lax.Precision.HIGHEST)
+
+
+def reuse_matmul_int8_ref(
+    delta_q: jax.Array,     # [M, K] int8
+    w_q: jax.Array,         # [K, N] int8
+    prev_acc: jax.Array,    # [M, N] int32
+    block_mask: jax.Array,  # [gm, gk] int32
+    block_m: int,
+    block_k: int,
+) -> jax.Array:
+    """Int8 × int8 → int32 accumulate variant (the mla8 analogue)."""
+    m, k = delta_q.shape
+    emask = expand_block_mask(block_mask, m, k, block_m, block_k).astype(jnp.int32)
+    d = delta_q.astype(jnp.int32) * emask
+    return prev_acc + jax.lax.dot(d, w_q.astype(jnp.int32),
+                                  preferred_element_type=jnp.int32)
+
+
+def delta_quant_ref(
+    x: jax.Array,        # [M, K] float
+    prev_q: jax.Array,   # [M, K] int8
+    scale: jax.Array,    # scalar f32
+    block_m: int,
+    block_k: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused quantize + delta + tile mask. Returns (cur_q, delta_bf16, mask)."""
+    from repro.core.similarity import block_zero_mask
+
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    cur_q = q.astype(jnp.int8)
+    dq = cur_q.astype(jnp.int32) - prev_q.astype(jnp.int32)
+    delta = (dq.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    mask = block_zero_mask(dq, block_m, block_k)
+    return cur_q, delta, mask

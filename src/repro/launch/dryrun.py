@@ -1,0 +1,351 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without hardware:
+``jax.jit(step, in_shardings, out_shardings).lower(specs).compile()`` must
+succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh for every
+runnable cell; ``memory_analysis()`` proves it fits, ``cost_analysis()`` +
+the HLO collective parse feed §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh pod --out experiments/dryrun
+Cells already present in --out are skipped (resumable).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.dist import sharding
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.specs import (
+    SHAPES,
+    cell_runnable,
+    input_specs,
+    state_specs_struct,
+)
+from repro.roofline.hlo_parse import parse_collective_bytes, summarize_cost
+
+
+def _eval_shape_tree(fn, *args, **kwargs):
+    return jax.eval_shape(fn, *args, **kwargs)
+
+
+def build_cell(arch: str, shape: str, mesh, *, reuse: bool = False,
+               sharding_mode: str = "tp", remat_policy: str = "full",
+               cfg_overrides: dict | None = None):
+    """Returns (jitted_fn, arg_structs, in_shardings) for one cell."""
+    from jax.sharding import PartitionSpec as P
+
+    cfg = get_config(arch)
+    if remat_policy != "full":
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = SHAPES[shape]
+    ax = mesh_axes(mesh)
+    dp = ax["dp_axes"]
+    key = jax.random.PRNGKey(0)
+
+    inputs = input_specs(cfg, cell)
+    in_specs_batch = sharding.sanitize_specs(
+        sharding.batch_specs(cfg, inputs, dp_axes=dp), inputs, mesh
+    )
+
+    if cell.kind == "train":
+        from repro.optim.adamw import AdamWConfig
+        from repro.train.train_step import init_train_state, make_train_step
+
+        state = _eval_shape_tree(
+            lambda: init_train_state(cfg, key)
+        )
+        fsdp_size = mesh.devices.size // (2 if "pod" in mesh.axis_names else 1)
+        pspecs = sharding.sanitize_specs(
+            sharding.param_specs(
+                cfg, state["params"], model_size=ax["model_size"],
+                mode=sharding_mode, fsdp_size=fsdp_size,
+            ),
+            state["params"], mesh,
+        )
+        state_specs = {
+            "params": pspecs,
+            "opt": sharding.opt_state_specs(pspecs),
+        }
+        step = make_train_step(cfg, AdamWConfig())
+        fn = step
+        args = (state, inputs)
+        in_shardings = (state_specs, in_specs_batch)
+        out_shardings = (state_specs, None)
+    elif cell.kind == "prefill":
+        from repro.models import init_params
+        from repro.serve.serve_step import init_serve_state, prefill_step
+
+        params = _eval_shape_tree(lambda: init_params(cfg, key))
+        dstate = _eval_shape_tree(
+            lambda: init_serve_state(cfg, cell.global_batch, cell.seq_len)
+        )
+        pspecs = sharding.sanitize_specs(
+            sharding.param_specs(cfg, params, model_size=ax["model_size"]),
+            params, mesh,
+        )
+        sspecs = sharding.sanitize_specs(
+            sharding.decode_state_specs(
+                cfg, dstate, dp_axes=dp, batch=cell.global_batch,
+                data_size=ax["data_size"],
+            ),
+            dstate, mesh,
+        )
+        fn = lambda p, i, s: prefill_step(p, cfg, i, s)
+        args = (params, inputs, dstate)
+        in_shardings = (pspecs, in_specs_batch, sspecs)
+        out_shardings = (None, sspecs)
+    else:  # decode
+        from repro.models import init_params
+        from repro.serve.serve_step import (
+            build_reuse_engine,
+            decode_step,
+            init_serve_state,
+        )
+
+        params = _eval_shape_tree(lambda: init_params(cfg, key))
+        dstate = _eval_shape_tree(
+            lambda: init_serve_state(cfg, cell.global_batch, cell.seq_len)
+        )
+        pspecs = sharding.sanitize_specs(
+            sharding.param_specs(cfg, params, model_size=ax["model_size"]),
+            params, mesh,
+        )
+        sspecs = sharding.sanitize_specs(
+            sharding.decode_state_specs(
+                cfg, dstate, dp_axes=dp, batch=cell.global_batch,
+                data_size=ax["data_size"],
+            ),
+            dstate, mesh,
+        )
+        # decode begins with a full cache (the assigned decode shapes)
+        dstate = dict(dstate)
+        if reuse:
+            engine = build_reuse_engine(cfg, impl="jnp")
+            rcache = _eval_shape_tree(
+                lambda: engine.init_cache(cell.global_batch)
+            )
+            rspecs = sharding.sanitize_specs(
+                sharding.reuse_cache_specs(rcache, dp_axes=dp), rcache, mesh
+            )
+            fn = lambda p, t, s, rc: decode_step(
+                p, cfg, t["tokens"], s, engine=engine, reuse_cache=rc
+            )
+            args = (params, inputs, dstate, rcache)
+            in_shardings = (pspecs, in_specs_batch, sspecs, rspecs)
+            out_shardings = (None, sspecs, rspecs)
+        else:
+            fn = lambda p, t, s: decode_step(p, cfg, t["tokens"], s)[:2]
+            args = (params, inputs, dstate)
+            in_shardings = (pspecs, in_specs_batch, sspecs)
+            out_shardings = (None, sspecs)
+
+    return fn, args, in_shardings, out_shardings
+
+
+def build_pipeline_cell(arch: str, shape: str, mesh):
+    """Extra multi-pod demonstration: GPipe over the pod axis composed with
+    TP/DP (partial-auto shard_map), lowered as a full loss+grad step."""
+    from repro.dist.pipeline import pipeline_train_loss
+    from repro.models import init_params
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ax = mesh_axes(mesh)
+    key = jax.random.PRNGKey(0)
+    inputs = input_specs(cfg, cell)
+    params = _eval_shape_tree(lambda: init_params(cfg, key))
+    pspecs = sharding.sanitize_specs(
+        sharding.param_specs(cfg, params, model_size=ax["model_size"]),
+        params, mesh,
+    )
+    # stage-shard the stacked superblocks on "pod" (dim 0)
+    from jax.sharding import PartitionSpec as P
+
+    def stage_spec(spec, leaf):
+        rest = tuple(spec) + (None,) * (leaf.ndim - len(spec))
+        return P("pod", *rest[1:])
+
+    pspecs = dict(pspecs)
+    pspecs["blocks"] = jax.tree.map(
+        stage_spec, pspecs["blocks"], params["blocks"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    in_specs_batch = sharding.sanitize_specs(
+        sharding.batch_specs(cfg, inputs, dp_axes=("data",)), inputs, mesh
+    )
+
+    def fn(p, batch):
+        return jax.value_and_grad(
+            lambda pp: pipeline_train_loss(cfg, pp, batch, n_micro=8, mesh=mesh)
+        )(p)
+
+    return fn, (params, inputs), (pspecs, in_specs_batch), None
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, reuse: bool = False,
+             pipeline: bool = False, sharding_mode: str = "tp",
+             remat_policy: str = "full",
+             cfg_overrides: dict | None = None) -> dict:
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "reuse": reuse,
+        "pipeline": pipeline,
+        "sharding": sharding_mode,
+        "status": "unknown",
+    }
+    ok, why = cell_runnable(arch, shape)
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    try:
+        if pipeline:
+            fn, args, in_sh, out_sh = build_pipeline_cell(arch, shape, mesh)
+        else:
+            fn, args, in_sh, out_sh = build_cell(
+                arch, shape, mesh, reuse=reuse, sharding_mode=sharding_mode,
+                remat_policy=remat_policy, cfg_overrides=cfg_overrides)
+        with mesh:
+            from jax.sharding import NamedSharding
+
+            to_ns = lambda tree: jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                tree,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+            jitted = jax.jit(
+                fn,
+                in_shardings=to_ns(in_sh),
+                out_shardings=(
+                    None if out_sh is None
+                    else tuple(
+                        None if o is None else to_ns(o) for o in out_sh
+                    )
+                ),
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            try:
+                mem = compiled.memory_analysis()
+                record["memory_analysis"] = {
+                    k: int(getattr(mem, k))
+                    for k in (
+                        "argument_size_in_bytes",
+                        "output_size_in_bytes",
+                        "temp_size_in_bytes",
+                        "generated_code_size_in_bytes",
+                    )
+                    if hasattr(mem, k)
+                } if mem is not None else None
+            except Exception as e:  # CPU backend may not implement it
+                record["memory_analysis"] = f"unavailable: {e}"
+
+            try:
+                cost = compiled.cost_analysis()
+                record["cost_analysis"] = summarize_cost(cost)
+            except Exception as e:
+                record["cost_analysis"] = f"unavailable: {e}"
+
+            try:
+                hlo = compiled.as_text()
+                record["collectives"] = parse_collective_bytes(hlo)
+                record["hlo_bytes"] = len(hlo)
+            except Exception as e:
+                record["collectives"] = f"unavailable: {e}"
+
+        record.update(
+            status="ok",
+            lower_seconds=round(t_lower, 2),
+            compile_seconds=round(t_compile, 2),
+            n_devices=mesh.devices.size,
+        )
+    except Exception as e:
+        record.update(
+            status="failed",
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--reuse", action="store_true",
+                    help="decode cells: thread the ReuseSense cache (technique mode)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="extra cell: GPipe over the pod axis (multipod only)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--remat", default="full", choices=["full", "dots"])
+    ap.add_argument("--kv-pad", type=int, default=0,
+                    help="kv_head_pad_to override (§Perf: shard KV heads)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache override (§Perf)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for perf-iteration records (§Perf)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out) / args.mesh
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        tag = (f"{arch}__{shape}" + ("__reuse" if args.reuse else "")
+               + ("__pipeline" if args.pipeline else "")
+               + (f"__{args.tag}" if args.tag else ""))
+        path = outdir / f"{tag}.json"
+        if path.exists() and not args.force:
+            print(f"[skip-existing] {tag}")
+            continue
+        print(f"[run] {tag} on {args.mesh} ...", flush=True)
+        overrides = {}
+        if args.kv_pad:
+            overrides["kv_head_pad_to"] = args.kv_pad
+        if args.kv_quant:
+            overrides["kv_cache_quant"] = True
+        rec = run_cell(arch, shape, args.mesh, reuse=args.reuse,
+                       pipeline=args.pipeline, sharding_mode=args.sharding,
+                       remat_policy=args.remat,
+                       cfg_overrides=overrides or None)
+        path.write_text(json.dumps(rec, indent=2))
+        print(
+            f"[done] {tag}: {rec['status']} "
+            f"(compile {rec.get('compile_seconds', '-')}s)",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

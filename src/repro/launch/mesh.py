@@ -1,0 +1,27 @@
+"""Production mesh construction (function, not module constant — importing
+this module never touches jax device state)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod prepends a 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> dict:
+    """Role map for the sharding rules."""
+    names = mesh.axis_names
+    dp_axes = tuple(a for a in names if a in ("pod", "data"))
+    return {
+        "dp_axes": dp_axes,
+        "data_size": math.prod(mesh.shape[a] for a in dp_axes) if dp_axes else 1,
+        "model_axis": "model",
+        "model_size": mesh.shape["model"],
+    }

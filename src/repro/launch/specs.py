@@ -1,0 +1,106 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these. `make_dummy_inputs` materializes the same structure with real arrays
+for smoke tests at reduced scale.
+
+Assigned shape set (LM family, seq_len × global_batch):
+    train_4k      4096 × 256     train_step
+    prefill_32k   32768 × 32     serve prefill
+    decode_32k    1 new token, KV cache 32768, batch 128    serve decode
+    long_500k     1 new token, KV cache 524288, batch 1     serve decode
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+# Archs whose attention is quadratic-everywhere: long_500k is skipped
+# (DESIGN.md §4 records the skip). Encoder-only archs have no decode at all.
+FULL_ATTN_ARCHS = {
+    "llama4-scout-17b-a16e", "nemotron-4-15b", "qwen3-32b", "qwen2-72b",
+    "qwen2-vl-7b",
+}
+ENCODER_ARCHS = {"hubert-xlarge"}
+
+
+def cell_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    if shape in ("decode_32k", "long_500k") and arch in ENCODER_ARCHS:
+        return False, "encoder-only: no autoregressive decode step exists"
+    if shape == "long_500k" and arch in FULL_ATTN_ARCHS:
+        return False, "pure full attention: 500k decode KV excluded by assignment"
+    return True, ""
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.frontend == "audio":
+        return {
+            "embeds": SDS((b, s, cfg.d_model), jnp.bfloat16),
+            "labels": SDS((b, s), jnp.int32),
+        }
+    return {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.frontend == "audio":
+        return {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b = cell.global_batch
+    return {"tokens": SDS((b, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    if cell.kind == "train":
+        return train_input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_input_specs(cfg, cell)
+    return decode_input_specs(cfg, cell)
+
+
+def state_specs_struct(tree: Any) -> Any:
+    """Decode/train state as ShapeDtypeStructs (no allocation) via eval_shape."""
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def make_dummy_inputs(cfg: ModelConfig, cell: ShapeCell, key=None) -> dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    spec = input_specs(cfg, cell)
+
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype) + 3
+        return jax.random.normal(key, s.shape, jnp.float32).astype(s.dtype)
+
+    return jax.tree.map(mk, spec)

@@ -1,0 +1,18 @@
+from repro.models import layers, moe, ssm, transformer
+from repro.models.transformer import (
+    forward,
+    init_decode_state,
+    init_params,
+    output_logits,
+)
+
+__all__ = [
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "layers",
+    "moe",
+    "output_logits",
+    "ssm",
+    "transformer",
+]

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts: top-k routing with capacity-bounded sorted dispatch.
+
+Dispatch is scatter-based (tokens are ranked within their expert and placed
+into an [E, C, d] buffer), NOT all-experts-dense, so the lowered HLO carries
+the *active* FLOPs only — 6·N_active·D roofline bookkeeping stays honest.
+
+Sharding (dist/sharding.py):
+  EP  — experts on the "model" axis when E % model_size == 0 (llama4: 16/16);
+        the token scatter/gather becomes the all-to-all-equivalent collective.
+  TP  — d_ff on the "model" axis inside every expert otherwise (mixtral: 8
+        experts on a 16-way axis).
+
+Reuse note (DESIGN.md §4): routed-expert GEMMs see a *different* token stream
+each step (routing flips), which breaks the "consecutive evaluations of the
+same stream" premise of delta reuse, so expert sites default to kernelMode =
+basic; attention/shared-expert sites carry the reuse. This is recorded as an
+arch-applicability finding, not a limitation of the dispatch.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_norm, init_norm, _dense_init
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": (jax.random.normal(ks[0], (d, e), jnp.float32) * scale),
+        "wi": (jax.random.normal(ks[1], (e, d, 2 * f), jnp.float32) * scale
+               ).astype(cfg.dtype),
+        "wo": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+               * (1.0 / math.sqrt(f))).astype(cfg.dtype),
+        "norm": init_norm(d),
+    }
+    if cfg.shared_expert:
+        p["shared_wi"] = _dense_init(ks[3], (d, 2 * f), dtype=cfg.dtype)
+        p["shared_wo"] = _dense_init(ks[4], (f, d), dtype=cfg.dtype)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def moe_forward(
+    p: Params, cfg: ModelConfig, x: jax.Array, *, reuse_ctx=None,
+    site_prefix: str = "moe",
+) -> jax.Array:
+    """x: [B, S, d] -> [B, S, d]."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    h = apply_norm(p["norm"], x, cfg.norm_eps).reshape(t, d)
+
+    logits = jnp.einsum(
+        "td,de->te", h.astype(jnp.float32), p["router"],
+        preferred_element_type=jnp.float32,
+    )
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)                      # [T, k]
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, -1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                                   # [T*k]
+    flat_g = top_g.reshape(-1)
+    cap = _capacity(cfg, t)
+
+    # rank within expert (GShard-style position_in_expert)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - 1                         # [T*k, E]
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    flat_g = jnp.where(keep, flat_g, 0.0)
+    slot = jnp.where(keep, pos_in_e, cap)                        # cap = dropped
+
+    # scatter tokens into the expert buffer [E, C+1, d] (last row = dropped)
+    xe = jnp.zeros((e, cap + 1, d), dtype=x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    xe = xe.at[flat_e, slot].add(h[tok_idx], mode="drop")
+
+    # expert GEMMs (swiglu) — active FLOPs only
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["wi"],
+                    preferred_element_type=jnp.float32)
+    gate, up = jnp.split(hi, 2, axis=-1)
+    act = (jax.nn.silu(gate) * up).astype(x.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", act, p["wo"],
+                    preferred_element_type=jnp.float32)          # [E, C+1, d]
+
+    # gather back with combine weights
+    yt = ye[flat_e, slot]                                        # [T*k, d]
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    out = out.at[tok_idx].add(yt * flat_g[:, None], mode="drop")
+
+    if cfg.shared_expert:
+        from repro.models.layers import _maybe_reuse_matmul
+
+        hi_s = _maybe_reuse_matmul(
+            f"{site_prefix}_shared_in", h, p["shared_wi"], None, reuse_ctx
+        )
+        g_s, u_s = jnp.split(hi_s, 2, axis=-1)
+        act_s = jax.nn.silu(g_s.astype(jnp.float32)).astype(x.dtype) * u_s
+        out = out + _maybe_reuse_matmul(
+            f"{site_prefix}_shared_out", act_s, p["shared_wo"], None, reuse_ctx
+        ).astype(jnp.float32)
+
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def router_aux_loss(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (used by train_step for MoE)."""
+    b, s, d = x.shape
+    h = apply_norm(p["norm"], x, cfg.norm_eps).reshape(-1, d)
+    logits = jnp.einsum("td,de->te", h.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(gates, axis=-1)
+    density = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts), axis=0)
+    density_proxy = jnp.mean(gates, axis=0)
+    return cfg.n_experts * jnp.sum(density * density_proxy)

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.compression import compress_with_feedback, decompress
+from repro.optim.schedules import constant, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "init_opt_state",
+    "compress_with_feedback", "decompress",
+    "constant", "linear_warmup_cosine",
+]

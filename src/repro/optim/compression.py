@@ -1,0 +1,68 @@
+"""Int8 gradient compression with error feedback (distributed-optimization trick).
+
+At 1000+ node scale the gradient all-reduce dominates the collective term for
+DP-heavy meshes. Compressing gradients to int8 (per-leaf max-abs scale) before
+the reduction cuts DP collective bytes 4x (vs f32) / 2x (vs bf16); the error-
+feedback residual keeps the optimizer unbiased in expectation (1-bit Adam /
+PowerSGD lineage).
+
+Usage in train_step:
+    cgrads, new_residual = compress_with_feedback(grads, residual)
+    # psum/all-reduce happens on cgrads.q (int8) + cgrads.scale (f32 scalar)
+    grads = decompress(cgrads)
+
+The compiled collective then moves int8 tensors — visible in the dry-run's
+collective-byte parse, which is how §Perf measures the win.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedLeaf(NamedTuple):
+    q: jax.Array      # int8
+    scale: jax.Array  # f32 scalar
+
+
+def _compress_leaf(g: jax.Array) -> CompressedLeaf:
+    amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return CompressedLeaf(q=q, scale=scale)
+
+
+def _decompress_leaf(c: CompressedLeaf) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compress_with_feedback(
+    grads: Any, residual: Any | None
+) -> tuple[Any, Any]:
+    """Returns (compressed pytree of CompressedLeaf, new residual pytree)."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual
+    )
+    compressed = jax.tree.map(
+        _compress_leaf, corrected, is_leaf=lambda x: isinstance(x, jax.Array)
+    )
+    new_residual = jax.tree.map(
+        lambda c, x: x - _decompress_leaf(c),
+        compressed,
+        corrected,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf),
+    )
+    return compressed, new_residual
+
+
+def decompress(compressed: Any) -> Any:
+    return jax.tree.map(
+        _decompress_leaf,
+        compressed,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf),
+    )

@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, *, value: float = 1.0):
+    del step
+    return value

@@ -1,0 +1,15 @@
+from repro.quant.quantize import (
+    QuantSpec,
+    calibrate_scale,
+    dequantize_int8,
+    fake_quantize,
+    quantize_int8,
+)
+
+__all__ = [
+    "QuantSpec",
+    "calibrate_scale",
+    "dequantize_int8",
+    "fake_quantize",
+    "quantize_int8",
+]

@@ -1,0 +1,69 @@
+"""Symmetric int8 quantization (QAsymm8 analogue from the paper's ARMNN setup).
+
+ReuseSense evaluates 8-bit quantized DNNs: input similarity is defined in the
+*quantized code domain* (two activations are "identical" iff their int8 codes
+match), which is what makes similarity so high in practice (quantization
+collapses nearby values; ReLU-family activations collapse to the zero code).
+
+We use symmetric int8 (zero-point 0) with per-tensor or per-channel scales and
+int32 accumulation. Symmetric quantization keeps the delta algebra exact:
+
+    dequant(q_c) - dequant(q_p) = scale * (q_c - q_p)
+
+so the delta is exactly zero wherever codes match — the invariant the whole
+reuse scheme rests on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -127  # symmetric: reserve -128 so |q| <= 127 and -q is representable
+INT8_MAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static quantization configuration for one tensor site."""
+
+    bits: int = 8
+    per_channel: bool = False
+    channel_axis: int = -1
+    # Scales are calibrated from data (max-abs) or fixed ahead of time.
+    fixed_scale: float | None = None
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def calibrate_scale(x: jax.Array, spec: QuantSpec = QuantSpec()) -> jax.Array:
+    """Max-abs scale so that x/scale spans the int range. Shape: scalar or per-channel."""
+    if spec.fixed_scale is not None:
+        return jnp.asarray(spec.fixed_scale, dtype=jnp.float32)
+    if spec.per_channel:
+        axes = tuple(a for a in range(x.ndim) if a != spec.channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=False)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    amax = jnp.maximum(amax.astype(jnp.float32), 1e-8)
+    return amax / spec.qmax
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """x -> int8 codes. `scale` broadcasts against x."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quantize(x: jax.Array, spec: QuantSpec = QuantSpec()) -> jax.Array:
+    """Quantize+dequantize: the float tensor the quantized model actually sees."""
+    scale = calibrate_scale(x, spec)
+    return dequantize_int8(quantize_int8(x, scale), scale, dtype=x.dtype)

@@ -1,0 +1,84 @@
+"""Parse collective traffic out of compiled (SPMD-partitioned) HLO text.
+
+`cost_analysis()` has no collective-byte counter, so we sum the per-device
+result payload of every collective op in the partitioned module. Shapes in
+post-SPMD HLO are already per-device, so result bytes ≈ bytes crossing the
+ICI per device per op (ring all-reduce moves ~2·(n−1)/n ≈ 2× that; we report
+raw payload and apply the ring factor in the roofline term).
+
+Ops counted: all-gather, all-reduce, reduce-scatter, all-to-all,
+collective-permute (+ their -start/-done async forms, deduped by id).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.42 = f32[16,1024]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Returns {"total_bytes": int, "by_kind": {kind: bytes}, "count": int}."""
+    by_kind: dict[str, int] = defaultdict(int)
+    count = 0
+    for m in _OP_RE.finditer(hlo_text):
+        name, tuple_body, dtype, dims, kind = m.groups()
+        if name.endswith(".clone") or "-done" in name:
+            continue
+        if tuple_body is not None:
+            sz = sum(
+                _shape_bytes(dt, dm) for dt, dm in _TUPLE_ELEM_RE.findall(tuple_body)
+            )
+        else:
+            sz = _shape_bytes(dtype, dims)
+        by_kind[kind] += sz
+        count += 1
+    return {
+        "total_bytes": int(sum(by_kind.values())),
+        "by_kind": dict(by_kind),
+        "count": count,
+    }
+
+
+def summarize_cost(cost: dict | None) -> dict:
+    if not cost:
+        return {}
+    keep = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+        if k in cost:
+            keep[k] = float(cost[k])
+    # per-memory-space byte counters (bytes accessed0{} etc.)
+    for k, v in cost.items():
+        if isinstance(v, (int, float)) and k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep

@@ -1,0 +1,13 @@
+from repro.serve.scheduler import ContinuousBatcher, Request, reset_slot
+from repro.serve.serve_step import (
+    build_reuse_engine,
+    decode_step,
+    greedy_sample,
+    init_serve_state,
+    prefill_step,
+)
+
+__all__ = [
+    "ContinuousBatcher", "Request", "build_reuse_engine", "decode_step",
+    "greedy_sample", "init_serve_state", "prefill_step", "reset_slot",
+]

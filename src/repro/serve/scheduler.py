@@ -1,0 +1,111 @@
+"""Continuous-batching request scheduler for the serving runtime.
+
+Slot-based scheduler in the vLLM lineage, sized to the assigned decode
+shapes: a fixed decode batch of B slots; requests queue, claim a free slot,
+prefill into that slot's cache lane, then ride the shared decode step until
+EOS/limit. The ReuseSense caches are slot-aligned: when a slot is recycled,
+its reuse-cache lane is reset (a fresh stream must not delta against the
+previous occupant) — `reset_slot` zeroes prev_q/prev_out and the engine's
+cold-start property (reuse == quantized dense on first step) makes that safe.
+
+The step loop is host-side Python driving jitted steps — the scheduler is
+exercised end-to-end at reduced scale in examples/serve_reuse.py and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: run to max_new_tokens
+    # filled by the scheduler
+    output: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+def reset_slot(reuse_cache: dict | None, slot: int) -> dict | None:
+    """Zero one slot's reuse lane across all sites (stream handoff)."""
+    if reuse_cache is None:
+        return None
+
+    def zero_slot(leaf, name):
+        if name in ("prev_q", "prev_out"):
+            return leaf.at[..., slot, :].set(0)
+        return leaf
+
+    return {
+        site: {k: zero_slot(v, k) for k, v in entry.items()}
+        for site, entry in reuse_cache.items()
+    }
+
+
+class ContinuousBatcher:
+    def __init__(
+        self,
+        *,
+        batch_slots: int,
+        prefill_fn: Callable,     # (slot_tokens [1, S], slot) -> first token
+        decode_fn: Callable,      # (tokens [B, 1]) -> next tokens [B, 1]
+        max_steps: int = 512,
+    ):
+        self.batch_slots = batch_slots
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.max_steps = max_steps
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.free_slots = list(range(batch_slots))
+        self.completed: list[Request] = []
+        self.stats = {"steps": 0, "prefills": 0, "emitted_tokens": 0}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            slot = self.free_slots.pop()
+            req = self.queue.popleft()
+            req.slot = slot
+            first = self.prefill_fn(req.prompt[None, :], slot)
+            req.output.append(int(first))
+            self.active[slot] = req
+            self.stats["prefills"] += 1
+
+    def _retire(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        req.done = True
+        self.completed.append(req)
+        self.free_slots.append(slot)
+
+    def run(self) -> list[Request]:
+        cur = np.zeros((self.batch_slots, 1), np.int32)
+        for _ in range(self.max_steps):
+            self._admit()
+            if not self.active and not self.queue:
+                break
+            for slot, req in self.active.items():
+                cur[slot, 0] = req.output[-1]
+            nxt = np.asarray(self.decode_fn(cur))
+            self.stats["steps"] += 1
+            for slot in list(self.active):
+                req = self.active[slot]
+                tok = int(nxt[slot, 0])
+                req.output.append(tok)
+                self.stats["emitted_tokens"] += 1
+                if (req.eos_id >= 0 and tok == req.eos_id) or (
+                    len(req.output) >= req.max_new_tokens
+                ):
+                    self._retire(slot)
+        return self.completed

@@ -1,0 +1,160 @@
+"""Per-kernel validation: shape/dtype/mask sweeps against the ref.py oracles,
+in Pallas interpret mode (executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delta import delta_encode_int8
+from repro.core.similarity import block_zero_mask
+from repro.kernels import ops
+from repro.kernels.reuse_matmul import _skip_sel
+from repro.quant import quantize_int8
+
+
+def make_blocky_delta(rng, m, k, bm, bk, keep_prob, dtype=np.float32):
+    """Delta tensor with a controlled fraction of all-zero tiles."""
+    delta = rng.normal(size=(m, k)).astype(dtype)
+    gm, gk = -(-m // bm), -(-k // bk)
+    for i in range(gm):
+        for j in range(gk):
+            if rng.random() >= keep_prob:
+                delta[i * bm:(i + 1) * bm, j * bk:(j + 1) * bk] = 0.0
+    return delta
+
+
+SWEEP = [
+    # (M, K, N, bm, bn, bk, keep)
+    (32, 256, 128, 8, 128, 128, 0.5),
+    (64, 512, 256, 32, 128, 128, 0.3),
+    (128, 1024, 128, 64, 128, 256, 0.7),
+    (8, 256, 384, 8, 128, 128, 0.0),    # fully skippable
+    (16, 512, 128, 16, 128, 512, 1.0),  # nothing skippable
+    (24, 384, 128, 8, 128, 128, 0.4),   # M not multiple of bm after pad? 24%8==0
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk,keep", SWEEP)
+@pytest.mark.parametrize("dataflow", ["output", "input"])
+def test_reuse_matmul_vs_ref(rng, m, k, n, bm, bn, bk, keep, dataflow):
+    delta = jnp.asarray(make_blocky_delta(rng, m, k, bm, bk, keep))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mask = block_zero_mask(delta, bm, bk)
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    out = ops.reuse_matmul(
+        delta, w, prev, mask, block_m=bm, block_n=bn, block_k=bk,
+        dataflow=dataflow, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reuse_matmul_dtypes(rng, dtype):
+    m, k, n, bm, bn, bk = 32, 512, 256, 8, 128, 128
+    delta = jnp.asarray(make_blocky_delta(rng, m, k, bm, bk, 0.5)).astype(dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mask = block_zero_mask(delta, bm, bk)
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    out = ops.reuse_matmul(
+        delta, w, prev, mask, block_m=bm, block_n=bn, block_k=bk, interpret=True
+    )
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol * 10,
+    )
+
+
+def test_mask_zero_blocks_never_loaded_semantics(rng):
+    """Tiles masked out contribute nothing even if delta there is nonzero —
+    proves the kernel consumes the MASK (load-skip), not the data."""
+    m, k, n, bm, bk = 16, 512, 128, 8, 128
+    delta = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))  # dense!
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.zeros((m, n), jnp.float32)
+    mask = jnp.zeros((m // bm, k // bk), jnp.int32).at[0, 1].set(1)
+    out = ops.reuse_matmul(
+        delta, w, prev, mask, block_m=bm, block_n=128, block_k=bk, interpret=True
+    )
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+    # and the unmasked-row result is NOT the dense product (skips happened)
+    dense = prev + delta @ w
+    assert not np.allclose(np.asarray(out), np.asarray(dense))
+
+
+def test_skip_sel_repeats_previous_index():
+    mask = jnp.asarray([[0, 1, 0, 0, 1], [1, 0, 0, 1, 0]], jnp.int32)
+    sel = np.asarray(_skip_sel(mask))
+    np.testing.assert_array_equal(sel, [[0, 1, 1, 1, 4], [0, 0, 0, 3, 3]])
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 512, 128), (64, 256, 256)])
+def test_reuse_matmul_int8_vs_ref(rng, m, k, n):
+    bm, bn, bk = 8, 128, 128
+    cur = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    prev = jnp.asarray(rng.integers(-127, 128, size=(m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int8)
+    acc = jnp.asarray(rng.integers(-1000, 1000, size=(m, n)), jnp.int32)
+    enc = delta_encode_int8(cur, prev, block_m=bm, block_k=bk)
+    out = ops.reuse_matmul_int8(
+        enc.lo, wq, acc, enc.lo_mask, block_m=bm, block_n=bn, block_k=bk,
+        interpret=True,
+    )
+    ref = ops.reuse_matmul_int8_ref(enc.lo, wq, acc, enc.lo_mask, bm, bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_int8_overflow_split_is_exact(rng):
+    """Paper Sec. IV-B: |q_c - q_p| can exceed 127; split into lo+hi, both
+    in-range, and the two-pass kernel result equals the exact int32 GEMM."""
+    m, k, n, bm, bk = 16, 256, 128, 8, 128
+    cur = jnp.full((m, k), 127, jnp.int8)
+    prev = jnp.full((m, k), -127, jnp.int8)     # delta = 254 everywhere
+    wq = jnp.asarray(rng.integers(-127, 128, size=(k, n)), jnp.int8)
+    acc = jnp.zeros((m, n), jnp.int32)
+    enc = delta_encode_int8(cur, prev, block_m=bm, block_k=bk)
+    assert bool(enc.has_overflow)
+    assert int(jnp.max(jnp.abs(enc.lo.astype(jnp.int32)))) <= 127
+    assert int(jnp.max(jnp.abs(enc.hi.astype(jnp.int32)))) <= 127
+    lo = ops.reuse_matmul_int8(enc.lo, wq, acc, enc.lo_mask,
+                               block_m=bm, block_n=128, block_k=bk, interpret=True)
+    out = ops.reuse_matmul_int8(enc.hi, wq, lo, enc.hi_mask,
+                                block_m=bm, block_n=128, block_k=bk, interpret=True)
+    exact = (cur.astype(jnp.int32) - prev.astype(jnp.int32)) @ wq.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exact))
+
+
+@pytest.mark.parametrize("m,k,bm,bk", [(32, 512, 8, 128), (64, 256, 16, 256),
+                                       (128, 1024, 128, 256)])
+def test_delta_quant_fused_vs_ref(rng, m, k, bm, bk):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    prev_q = quantize_int8(
+        jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)), jnp.float32(0.05)
+    )
+    q, d, msk = ops.delta_quant_fused(
+        x, prev_q, jnp.float32(0.05), block_m=bm, block_k=bk, interpret=True
+    )
+    q2, d2, msk2 = ops.delta_quant_ref(x, prev_q, jnp.float32(0.05), bm, bk)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_allclose(
+        np.asarray(d, np.float32), np.asarray(d2, np.float32), atol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(msk), np.asarray(msk2))
+
+
+def test_compact_path_matches_shared_k_ref(rng):
+    m, k, n, bk = 48, 1024, 192, 128
+    delta = make_blocky_delta(rng, m, k, m, bk, 0.4)  # shared-K blocky
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    prev = rng.normal(size=(m, n)).astype(np.float32)
+    kmask = (np.abs(delta).reshape(m, k // bk, bk).sum(axis=(0, 2)) > 0)
+    out = ops.reuse_matmul_compact(
+        jnp.asarray(delta), jnp.asarray(w), jnp.asarray(prev),
+        jnp.asarray(kmask, jnp.int32), block_k=bk,
+    )
+    ref = prev + delta @ w
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,116 @@
+"""Sharding rules: every arch's param tree gets valid, divisible specs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.dist import sharding
+from repro.models import init_decode_state, init_params
+
+ARCH_NAMES = sorted(ARCHS)
+
+
+def small_mesh():
+    # 1 real device; mesh (1, 1) exercises the full spec path
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_cover_tree(arch):
+    cfg = ARCHS[arch].reduced()
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, model_size=16)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for leaf, spec in zip(flat_p, flat_s):
+        assert isinstance(spec, P)
+        assert len(spec) <= leaf.ndim, (spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_sanitize_drops_nondivisible(arch):
+    """After sanitize, every sharded dim divides by its axis size for the
+    production 16x16 mesh factors — checked arithmetically (no devices)."""
+    cfg = ARCHS[arch]  # FULL config: the real divisibility stress
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, model_size=16)
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16, "pod": 2}
+
+    fixed = sharding.sanitize_specs(specs, params, FakeMesh())
+
+    def check(spec, leaf):
+        for size, axes in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if axes is None:
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            total = int(np.prod([FakeMesh.shape[a] for a in axes_t]))
+            assert size % total == 0, (spec, leaf.shape)
+
+    jax.tree.map(check, fixed, params, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_tp_rules_megatron_mapping():
+    """QKV column-parallel, O row-parallel, MLP in/out col/row, vocab sharded."""
+    cfg = ARCHS["qwen3-32b"].reduced()
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = sharding.param_specs(cfg, params, model_size=16)
+    blocks = specs["blocks"]
+    assert tuple(blocks["attn"]["wqkv"])[-1] == "model"
+    assert tuple(blocks["attn"]["wo"])[-2] == "model"
+    assert tuple(blocks["mlp"]["wi"])[-1] == "model"
+    assert tuple(blocks["mlp"]["wo"])[-2] == "model"
+    assert tuple(specs["embed"])[-2] == "model"
+
+
+def test_moe_ep_vs_tp_mode():
+    llama4 = ARCHS["llama4-scout-17b-a16e"]      # 16 experts -> EP on 16
+    mixtral = ARCHS["mixtral-8x7b"]              # 8 experts  -> TP inside
+    for cfg, expect_ep in ((llama4, True), (mixtral, False)):
+        params = jax.eval_shape(
+            lambda c=cfg: init_params(c.reduced(), jax.random.PRNGKey(0))
+        )
+        # use full-config expert count for the mode decision
+        specs = sharding.param_specs(cfg, params, model_size=16)
+        wi = tuple(jax.tree.leaves(
+            specs["blocks"]["moe"]["wi"],
+            is_leaf=lambda x: isinstance(x, P))[0])
+        if expect_ep:
+            assert wi[-3] == "model" and wi[-1] is None
+        else:
+            assert wi[-3] is None and wi[-1] == "model"
+
+
+def test_decode_state_sp_mode_for_small_batch():
+    cfg = ARCHS["rwkv6-7b"]
+    state = jax.eval_shape(lambda: init_decode_state(cfg.reduced(), 1, 64))
+    specs = sharding.decode_state_specs(
+        cfg, state, dp_axes=("data",), batch=1, data_size=16
+    )
+    # rwkv has no kv leaves; check a gemma3 cache instead
+    cfg2 = ARCHS["gemma3-12b"]
+    state2 = jax.eval_shape(lambda: init_decode_state(cfg2.reduced(), 1, 64))
+    specs2 = sharding.decode_state_specs(
+        cfg2, state2, dp_axes=("data",), batch=1, data_size=16
+    )
+    gk = tuple(jax.tree.leaves(
+        specs2["blocks"]["global"],
+        is_leaf=lambda x: isinstance(x, P))[0])
+    assert ("data",) in gk or "data" in gk  # sequence axis sharded (SP)
+
+
+def test_batch_vs_sp_mode_for_large_batch():
+    cfg = ARCHS["qwen3-32b"]
+    state = jax.eval_shape(lambda: init_decode_state(cfg.reduced(), 128, 64))
+    specs = sharding.decode_state_specs(
+        cfg, state, dp_axes=("data",), batch=128, data_size=16
+    )
+    k = tuple(jax.tree.leaves(
+        specs["blocks"], is_leaf=lambda x: isinstance(x, P))[0])
+    # [nsb, B, S, KV, D] -> batch dim carries the DP axes
+    assert k[1] in ("data", ("data",))  # P normalizes 1-tuples

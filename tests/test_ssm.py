@@ -1,0 +1,108 @@
+"""RWKV6 / Mamba2: streaming (chunked decode) must equal one-shot forward."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import ssm
+
+
+@pytest.fixture
+def rwkv_cfg():
+    return ARCHS["rwkv6-7b"].reduced()
+
+
+@pytest.fixture
+def mamba_cfg():
+    return ARCHS["zamba2-2.7b"].reduced()
+
+
+def test_rwkv6_streaming_equals_oneshot(rng, rwkv_cfg):
+    cfg = rwkv_cfg
+    p = ssm.init_rwkv6(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 24
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)).astype(np.float32) * 0.1)
+
+    st = ssm.init_rwkv6_state(cfg, b)
+    full, _ = ssm.rwkv6_time_mix(p, cfg, x, st["tmix"])
+
+    st2 = ssm.init_rwkv6_state(cfg, b)
+    outs = []
+    cur = st2["tmix"]
+    for t in range(s):
+        o, cur = ssm.rwkv6_time_mix(p, cfg, x[:, t : t + 1], cur)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(stream, np.float32), np.asarray(full, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_rwkv6_channel_mix_streaming(rng, rwkv_cfg):
+    cfg = rwkv_cfg
+    p = ssm.init_rwkv6(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 8
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)).astype(np.float32))
+    st = ssm.init_rwkv6_state(cfg, b)
+    full, _ = ssm.rwkv6_channel_mix(p, cfg, x, st["cmix"])
+    cur = ssm.init_rwkv6_state(cfg, b)["cmix"]
+    outs = []
+    for t in range(s):
+        o, cur = ssm.rwkv6_channel_mix(p, cfg, x[:, t : t + 1], cur)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(stream, np.float32), np.asarray(full, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_mamba2_streaming_equals_oneshot(rng, mamba_cfg):
+    cfg = mamba_cfg
+    p = ssm.init_mamba2(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)).astype(np.float32) * 0.1)
+
+    st = ssm.init_mamba2_state(cfg, b)
+    full, _ = ssm.mamba2_forward(p, cfg, x, st)
+
+    cur = ssm.init_mamba2_state(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cur = ssm.mamba2_forward(p, cfg, x[:, t : t + 1], cur)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(stream, np.float32), np.asarray(full, np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_mamba2_state_decays(rng, mamba_cfg):
+    """Feeding zeros after content: the SSM state's influence must shrink
+    (stability of the selective-decay recurrence)."""
+    cfg = mamba_cfg
+    p = ssm.init_mamba2(cfg, jax.random.PRNGKey(0))
+    b = 1
+    x = jnp.asarray(rng.normal(size=(b, 4, cfg.d_model)).astype(np.float32))
+    st = ssm.init_mamba2_state(cfg, b)
+    _, st = ssm.mamba2_forward(p, cfg, x, st)
+    h0 = float(jnp.linalg.norm(st["h"]))
+    zeros = jnp.zeros((b, 64, cfg.d_model), jnp.float32)
+    _, st = ssm.mamba2_forward(p, cfg, zeros, st)
+    h1 = float(jnp.linalg.norm(st["h"]))
+    assert h1 < h0
+
+
+def test_rwkv6_long_decode_state_is_o1(rwkv_cfg):
+    """The property that makes long_500k runnable: state size is independent
+    of how many tokens were consumed."""
+    cfg = rwkv_cfg
+    st = ssm.init_rwkv6_state(cfg, batch=1)
+    n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(st))
+    assert n_bytes < 1_000_000  # fixed, tiny, length-independent
