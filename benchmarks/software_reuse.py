@@ -38,11 +38,27 @@ def build_case(rng, m, k, n, similarity, block_k=256):
             jnp.asarray(~blk_keep, jnp.int32))
 
 
-def main(emit):
+def main(emit, *, measured_mode: bool = False):
     rng = np.random.default_rng(0)
     m, k, n = 256, 4096, 4096
     block_k = 256
-    delta, delta_blk, w, prev, kmask = build_case(rng, m, k, n, 0.45, block_k)
+    sim = 0.45  # the paper's operating point (analytic default)
+    if measured_mode:
+        # Operating point measured from live sensor counters instead of the
+        # paper constant. build_case's `similarity` is a BLOCK-level keep
+        # probability, so the matching measured quantity is the block-granular
+        # tile_skip_rate (hit_rate, the per-element match fraction, is
+        # systematically higher — harvest/sim ~0.7-0.9, see granularity.py).
+        from repro.sensor.runner import MEASURED_OPERATING_POINTS, run_measured_decode
+
+        arch, corr = MEASURED_OPERATING_POINTS[0]
+        md = run_measured_decode(arch, steps=10, batch=2, correlation=corr)
+        fr = md.skip_fractions
+        sim = max(fr["tile_skip_rate"], 0.05)
+        emit("software_reuse/measured_operating_point", 0.0,
+             f"tile_skip={fr['tile_skip_rate']:.3f};hit_rate={fr['hit_rate']:.3f}"
+             " (sensor counters from 10 real decode steps)")
+    delta, delta_blk, w, prev, kmask = build_case(rng, m, k, n, sim, block_k)
     x = delta + 1.0  # stand-in activations for the dense baseline
 
     dense = jax.jit(lambda x, w: x @ w)
@@ -61,18 +77,20 @@ def main(emit):
     emit("software_reuse/dense_baseline", t_dense, "GEMM 256x4096x4096")
     emit(
         "software_reuse/masked_sw_reuse", t_masked,
-        f"slowdown={t_masked / t_dense - 1:+.1%} (paper: +9.7% at 45% sim "
-        "— software reuse must not win)",
+        f"slowdown={t_masked / t_dense - 1:+.1%} at {sim:.0%} sim "
+        "(paper: +9.7% at 45% — software reuse must not win)",
     )
     emit(
         "software_reuse/structural_skip", t_compact,
-        f"speedup={t_dense / t_compact:.2f}x at 45% block similarity "
+        f"speedup={t_dense / t_compact:.2f}x at {sim:.0%} block similarity "
         "(skipping must be structural, the paper's thesis)",
     )
     return {"dense": t_dense, "masked": t_masked, "compact": t_compact}
 
 
 if __name__ == "__main__":
+    import sys
+
     from benchmarks.common import emit
 
-    main(emit)
+    main(emit, measured_mode="--measured" in sys.argv)

@@ -13,6 +13,10 @@ Two views:
    6.4x front-end-bypass component with no TPU analogue (XLA has no
    fetch/decode front-end); the transferable component is the skipped weight
    traffic + MACs, reported here.
+
+3. ``--measured``: real decode steps on reduced archs with the reuse engine
+   threaded; the skip fraction fed to the roofline model comes from the
+   SENSOR COUNTERS (repro.sensor), not from the PAPER_SIMILARITY table.
 """
 
 from __future__ import annotations
@@ -83,13 +87,46 @@ def modeled_tpu(emit):
     return rows
 
 
-def main(emit):
+def measured_decode(emit, *, steps: int = 10, batch: int = 2):
+    """Sensor-counter-driven speedup: run real decode steps, read the skip
+    rates the kernels actually achieved, and feed THOSE to the roofline
+    model (plus the site-local roofline speedup from the cost model)."""
+    from repro.sensor.cost_model import sensor_speedup
+    from repro.sensor.runner import MEASURED_OPERATING_POINTS, run_measured_decode
+
+    rows = []
+    for arch, corr in MEASURED_OPERATING_POINTS:
+        md = run_measured_decode(arch, steps=steps, batch=batch,
+                                 correlation=corr)
+        fr = md.skip_fractions
+        sp_site = sensor_speedup(md.report)
+        cfg = ARCHS[arch]
+        cell = SHAPES["decode_32k"]
+        base = cell_cost(cfg, cell, POD_MESH)
+        reuse = cell_cost(cfg, cell, POD_MESH,
+                          reuse_skip_fraction=fr["weight_byte_skip_rate"])
+        sp = base.step_s / reuse.step_s
+        rows.append((arch, fr, sp))
+        emit(f"speedup/measured_decode_{arch}", base.step_s * 1e6,
+             f"measured_weight_byte_skip={fr['weight_byte_skip_rate']:.1%};"
+             f"measured_tile_skip={fr['tile_skip_rate']:.1%};"
+             f"site_roofline_speedup={sp_site['site_speedup']:.2f}x;"
+             f"projected_step_speedup={sp:.2f}x "
+             f"(from sensor counters over {steps} real decode steps)")
+    return rows
+
+
+def main(emit, *, measured_mode: bool = False):
+    if measured_mode:
+        return {"measured_decode": measured_decode(emit)}
     a = measured_sweep(emit)
     b = modeled_tpu(emit)
     return {"measured": a, "modeled": b}
 
 
 if __name__ == "__main__":
+    import sys
+
     from benchmarks.common import emit
 
-    main(emit)
+    main(emit, measured_mode="--measured" in sys.argv)

@@ -1,5 +1,7 @@
 """Serving scenario: continuous batching + ReuseSense decode on a reduced
-Mixtral, with per-site similarity stats (the live Fig.-12 analogue).
+Mixtral, with measured sensor telemetry (the live Fig.-12 analogue): a
+per-request `SensorReport rid=... slot=... steps=... hit_rate=...` line is
+printed at each slot retirement, and the full per-site report at the end.
 
     PYTHONPATH=src python examples/serve_reuse.py
 

@@ -12,6 +12,7 @@ from repro.core.similarity import (
     block_zero_mask,
     code_similarity,
     harvestable_similarity,
+    row_code_similarity,
     similarity_breakdown,
 )
 
@@ -30,5 +31,6 @@ __all__ = [
     "init_reuse_cache",
     "init_site_cache",
     "reuse_linear",
+    "row_code_similarity",
     "similarity_breakdown",
 ]

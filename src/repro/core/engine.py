@@ -46,6 +46,7 @@ class ReuseEngine:
         n_layers: int = 0,
         block_m: int = 8,
         block_k: int = 256,
+        block_n: int = 128,
         mode: str = "auto",
     ) -> ReuseSiteSpec:
         dataflow = self.policy.decide_dataflow(in_features, out_features)
@@ -55,6 +56,7 @@ class ReuseEngine:
             out_features=out_features,
             block_m=block_m,
             block_k=block_k,
+            block_n=block_n,
             mode=mode,
             dataflow=dataflow,
         )
@@ -103,7 +105,20 @@ class ReuseEngine:
                 changed[name] = new_mode
         return changed
 
+    def sensor_report(self, cache: dict[str, Any]):
+        """Measured reuse accounting for the whole model — the ReuseSensor's
+        bypassed-computation / skipped-weight-load counts, reduced host-side
+        from the counters the kernels updated. Supersedes `site_summary`.
+
+        Returns a repro.sensor.aggregate.SensorReport (per-site, per-layer,
+        whole-model, JSONL-emittable)."""
+        from repro.sensor.aggregate import build_report
+
+        return build_report(self, cache)
+
     def site_summary(self, cache: dict[str, Any]) -> dict[str, dict[str, float]]:
+        """One EMA scalar per site. Superseded by `sensor_report` (measured
+        counters); kept for cheap logging and back-compat."""
         out = {}
         for name in self.sites:
             out[name] = {

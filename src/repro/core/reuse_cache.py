@@ -7,8 +7,13 @@ Here each *reuse site* (one linear op in the network) owns a cache entry:
     prev_q   : int8  [M, K]  — previous input, quantized codes
     prev_out : f32   [M, N]  — previous output (pre-activation)
     scale    : f32   scalar  — activation quant scale for this site
-    sim_ema  : f32   scalar  — running code-similarity estimate (policy input)
+    sim_ema  : f32   [M]     — per-slot running code-similarity estimate;
+                               the policy reads the mean, the scheduler resets
+                               one lane on slot recycle (no cross-stream bleed)
     steps    : i32   scalar  — number of evaluations seen (0 ⇒ cold, run dense)
+    sensor   : dict          — measured reuse-accounting counters (see
+                               repro.sensor.counters); ride here so they stay
+                               jit/donate/shard-friendly with the rest
 
 Caches are a plain pytree threaded through `serve_step` exactly like a KV
 cache, so they shard, donate, and checkpoint with the rest of the state. M is
@@ -34,6 +39,7 @@ class ReuseSiteSpec:
     out_features: int
     block_m: int = 8
     block_k: int = 256
+    block_n: int = 128  # weight-tile N width (kernel + DMA accounting)
     # kernelMode in the paper: "reuse" | "basic"; "auto" lets the policy decide
     # per call from sim_ema.
     mode: str = "auto"
@@ -43,12 +49,15 @@ class ReuseSiteSpec:
 
 
 def init_site_cache(spec: ReuseSiteSpec, batch: int) -> dict[str, jax.Array]:
+    from repro.sensor.counters import init_site_counters
+
     return {
         "prev_q": jnp.zeros((batch, spec.in_features), dtype=jnp.int8),
         "prev_out": jnp.zeros((batch, spec.out_features), dtype=jnp.float32),
         "scale": jnp.asarray(spec.fixed_scale, dtype=jnp.float32),
-        "sim_ema": jnp.zeros((), dtype=jnp.float32),
+        "sim_ema": jnp.zeros((batch,), dtype=jnp.float32),
         "steps": jnp.zeros((), dtype=jnp.int32),
+        "sensor": init_site_counters(batch),
     }
 
 

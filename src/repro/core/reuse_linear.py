@@ -29,8 +29,9 @@ import jax.numpy as jnp
 
 from repro.core.delta import delta_encode
 from repro.core.reuse_cache import ReuseSiteSpec
-from repro.core.similarity import code_similarity, ema_update
+from repro.core.similarity import ema_update, row_code_similarity
 from repro.kernels import ops
+from repro.sensor.counters import update_on_basic, update_on_reuse
 
 
 class ReuseStats(NamedTuple):
@@ -67,14 +68,22 @@ def reuse_linear(
             w,
             preferred_element_type=jnp.float32,
         )
-        sim = code_similarity(cur_q, cache["prev_q"])
+        row_sim = row_code_similarity(cur_q, cache["prev_q"])
+        sim = jnp.mean(row_sim)
         new_cache = dict(
             cache,
             prev_q=cur_q,
             prev_out=out,
-            sim_ema=ema_update(cache["sim_ema"], sim, ema_decay),
+            sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
             steps=cache["steps"] + 1,
         )
+        if "sensor" in cache:
+            new_cache["sensor"] = update_on_basic(
+                cache["sensor"], row_sim=row_sim, m=m, k=k, n=n,
+                gn=-(-n // spec.block_n),
+                block_m=spec.block_m, block_k=spec.block_k,
+                w_itemsize=w.dtype.itemsize,
+            )
         stats = ReuseStats(similarity=sim, skip_fraction=jnp.zeros(()))
     elif mode == "reuse":
         enc = delta_encode(
@@ -90,18 +99,30 @@ def reuse_linear(
         else:
             out = ops.reuse_matmul(
                 enc.delta, w, cache["prev_out"], enc.block_mask,
-                block_m=spec.block_m, block_k=spec.block_k,
+                block_m=spec.block_m, block_n=spec.block_n,
+                block_k=spec.block_k,
                 dataflow=spec.dataflow,
                 interpret=(impl == "pallas_interpret"),
             )
-        sim = code_similarity(enc.cur_q, cache["prev_q"])
+        row_sim = row_code_similarity(enc.cur_q, cache["prev_q"])
+        sim = jnp.mean(row_sim)
         new_cache = dict(
             cache,
             prev_q=enc.cur_q,
             prev_out=out,
-            sim_ema=ema_update(cache["sim_ema"], sim, ema_decay),
+            sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
             steps=cache["steps"] + 1,
         )
+        if "sensor" in cache:
+            gn = -(-n // spec.block_n)
+            new_cache["sensor"] = update_on_reuse(
+                cache["sensor"], block_mask=enc.block_mask, row_sim=row_sim,
+                block_m=spec.block_m, block_k=spec.block_k, n=n, gn=gn,
+                w_itemsize=w.dtype.itemsize,
+                dma_issued=ops.weight_dma_tiles(
+                    enc.block_mask, gn=gn, dataflow=spec.dataflow
+                ),
+            )
         stats = ReuseStats(similarity=sim, skip_fraction=enc.skip_fraction)
     else:
         raise ValueError(f"unknown mode {mode!r}")

@@ -25,6 +25,14 @@ def code_similarity(cur_q: jax.Array, prev_q: jax.Array) -> jax.Array:
     return jnp.mean((cur_q == prev_q).astype(jnp.float32))
 
 
+def row_code_similarity(cur_q: jax.Array, prev_q: jax.Array) -> jax.Array:
+    """Per-row code-match fraction, [M] — one similarity per serving slot.
+
+    Feeds the per-slot sim_ema lanes and the sensor hit-rate counters; the
+    scalar `code_similarity` is its mean."""
+    return jnp.mean((cur_q == prev_q).astype(jnp.float32), axis=-1)
+
+
 def similarity_breakdown(cur_q: jax.Array, prev_q: jax.Array) -> dict[str, jax.Array]:
     """Fig.-4 split: identical-and-zero vs identical-and-nonzero fractions."""
     same = cur_q == prev_q

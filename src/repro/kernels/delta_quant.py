@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _kernel(scale_ref, x_ref, prev_q_ref, q_ref, delta_ref, mask_ref):
     scale = scale_ref[0]
@@ -78,7 +80,7 @@ def delta_quant(
             jax.ShapeDtypeStruct((gm, gk), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
     )(scale_arr, x, prev_q)

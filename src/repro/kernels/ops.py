@@ -24,6 +24,7 @@ from repro.core.delta import compact_block_indices
 from repro.kernels import ref as _ref
 from repro.kernels.delta_quant import delta_quant as delta_quant_kernel
 from repro.kernels.reuse_matmul import reuse_matmul as _reuse_matmul_kernel
+from repro.kernels.reuse_matmul import weight_dma_tiles
 from repro.kernels.reuse_matmul_int8 import reuse_matmul_int8 as _reuse_matmul_int8
 
 __all__ = [
@@ -32,6 +33,7 @@ __all__ = [
     "reuse_matmul_masked",
     "delta_quant_fused",
     "reuse_matmul_int8",
+    "weight_dma_tiles",
 ]
 
 

@@ -1,0 +1,15 @@
+"""Version compatibility shims for `jax.experimental.pallas.tpu`.
+
+`TPUCompilerParams` was renamed to `CompilerParams` upstream; support both so
+the kernels import under the jax pinned in this image and under newer ones.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

@@ -39,6 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _skip_sel(block_mask: jax.Array) -> jax.Array:
     """sel[m, k] = index of the newest non-skipped k'-block with k' <= k.
@@ -53,6 +55,33 @@ def _skip_sel(block_mask: jax.Array) -> jax.Array:
     marked = jnp.where(block_mask != 0, ks, -1)
     sel = jax.lax.cummax(marked, axis=1)
     return jnp.maximum(sel, 0).astype(jnp.int32)
+
+
+def weight_dma_tiles(
+    block_mask: jax.Array, *, gn: int, dataflow: str = "output"
+) -> jax.Array:
+    """Measured weight-tile DMA count under this kernel's sel semantics.
+
+    The sensor subsystem's ground truth for "weight loads actually issued":
+    Pallas emits a copy only when a BlockSpec index changes between grid
+    steps, so the issue count is a property of the sel table, not of the
+    mask alone (the cold prefix clamps to tile 0, which still costs one
+    resident load per (m, n) panel).
+
+    * output-stationary, grid (gm, gn, gk): per (m, n) panel the w index is
+      (sel[m, k], n) — one load at k = 0 plus one per sel transition;
+    * input-stationary, grid (gm, gk, gn): a computed (m, k) tile sweeps gn
+      weight tiles; masked steps pin both coordinates (no copy issued).
+
+    Cheap trace-side math on the [gm, gk] mask — used for accounting, never
+    on the kernel's own critical path.
+    """
+    sel = _skip_sel(block_mask)
+    if dataflow == "output":
+        transitions = jnp.sum((sel[:, 1:] != sel[:, :-1]).astype(jnp.int32))
+        rows = block_mask.shape[0]
+        return (transitions + rows) * gn
+    return jnp.sum((block_mask != 0).astype(jnp.int32)) * gn
 
 
 def _kernel_output_stationary(
@@ -168,7 +197,7 @@ def reuse_matmul(
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((m, n), prev_out.dtype),
             interpret=interpret,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "parallel", "arbitrary"),
             ),
         )(block_mask, sel, delta, w, prev_out)
@@ -211,7 +240,7 @@ def reuse_matmul(
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((m, n), prev_out.dtype),
             interpret=interpret,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "arbitrary", "arbitrary"),
             ),
         )(block_mask, sel, delta, w, prev_out)

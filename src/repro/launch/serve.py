@@ -41,7 +41,13 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--reuse", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sensor-jsonl", default=None,
+                    help="append the final SensorReport rows to this JSONL file")
     args = ap.parse_args()
+
+    if args.sensor_jsonl and not args.reuse:
+        ap.error("--sensor-jsonl requires --reuse (sensor counters ride in "
+                 "the reuse cache)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,11 +105,31 @@ def main() -> None:
         return np.asarray(greedy_sample(logits[:, -1:]))[:, :, 0] \
             if logits.ndim == 4 else np.asarray(greedy_sample(logits))
 
+    telemetry_fn = None
+    on_retire = None
+    if engine is not None:
+        from repro.sensor.aggregate import slot_telemetry
+
+        def telemetry_fn(slot):
+            return slot_telemetry(engine, sstate["rcache"], slot)
+
+        def on_retire(req):
+            t = req.telemetry
+            print(f"SensorReport rid={req.rid} slot={t['slot']} "
+                  f"steps={t['steps']} hit_rate={t['hit_rate']:.3f} "
+                  f"sites={t['n_sites']}")
+            # Reset the freed lane now (telemetry is already snapshotted):
+            # bounds how much idle-slot decode history leaks into the
+            # end-of-run report before the next admission resets again.
+            sstate["rcache"] = reset_slot(sstate["rcache"], req.slot)
+
     batcher = ContinuousBatcher(
         batch_slots=args.batch_slots,
         prefill_fn=prefill_fn,
         decode_fn=decode_fn,
         max_steps=args.requests * args.max_new + 8,
+        telemetry_fn=telemetry_fn,
+        on_retire=on_retire,
     )
     for i in range(args.requests):
         batcher.submit(Request(
@@ -118,9 +144,11 @@ def main() -> None:
     print(f"served {len(done)}/{args.requests} requests in {dt:.2f}s; "
           f"{batcher.stats}")
     if engine is not None:
-        print("per-site reuse stats:")
-        for name, s in engine.site_summary(sstate["rcache"]).items():
-            print(f"  {name:24s} sim_ema={s['sim_ema']:.3f} mode={s['mode']}")
+        report = engine.sensor_report(sstate["rcache"])
+        print("\n".join(report.summary_lines()))
+        if args.sensor_jsonl:
+            report.write_jsonl(args.sensor_jsonl)
+            print(f"sensor report appended to {args.sensor_jsonl}")
     assert len(done) == args.requests
 
 

@@ -1,0 +1,50 @@
+"""repro.sensor — measured ReuseSensor telemetry & cost accounting.
+
+The paper's ReuseSensor is also the accounting engine: it knows, per layer,
+how many dot-product computations were bypassed and how many weight loads were
+skipped — those counts are what produce the headline 8x / 74% figures. This
+package is the reproduction's measured analogue:
+
+* ``counters``   — per-site counter pytree riding inside reuse-cache entries
+                   (jit/donate/shard-friendly; updated on the hot path);
+* ``aggregate``  — host-side reduction across sites/layers/slots into a
+                   :class:`SensorReport` with JSONL emission;
+* ``cost_model`` — cycles + energy derived from *measured* counters (the
+                   ``E_MAC``/``E_HBM``/``E_ICI`` constants live here);
+* ``runner``     — drives real decode steps and returns the resulting report
+                   (imported lazily as ``repro.sensor.runner`` to avoid a
+                   core↔serve import cycle; not re-exported here).
+"""
+
+from repro.sensor.aggregate import SensorReport, SiteSensor, build_report, slot_telemetry
+from repro.sensor.counters import (
+    init_site_counters,
+    update_on_basic,
+    update_on_reuse,
+)
+from repro.sensor.cost_model import (
+    E_HBM,
+    E_ICI,
+    E_MAC,
+    STATIC_W,
+    measured_skip_fractions,
+    sensor_energy,
+    sensor_speedup,
+)
+
+__all__ = [
+    "E_HBM",
+    "E_ICI",
+    "E_MAC",
+    "STATIC_W",
+    "SensorReport",
+    "SiteSensor",
+    "build_report",
+    "init_site_counters",
+    "measured_skip_fractions",
+    "sensor_energy",
+    "sensor_speedup",
+    "slot_telemetry",
+    "update_on_basic",
+    "update_on_reuse",
+]

@@ -1,0 +1,246 @@
+"""Host-side reduction of sensor counters into a SensorReport.
+
+``build_report(engine, cache)`` pulls the counter pytrees out of a reuse cache
+(one device→host transfer per site) and reduces them three ways:
+
+* per (site, layer)   — stacked sites carry a leading layer dimension, so a
+                        per-layer row is one slice of the counter leaves;
+* per site            — layers summed (the paper's per-layer Fig. 12 view is
+                        the per_layer list; this is the site inventory view);
+* whole model         — totals + derived skip rates, the numbers the measured
+                        benchmarks and the serving telemetry consume.
+
+The report is plain Python (dataclasses of floats/ints), safe to json-dump.
+``write_jsonl`` appends one JSON object per row — the serving emission format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SiteSensor:
+    """Measured counters for one reuse site (optionally one layer of it)."""
+
+    site: str
+    layer: int | None          # None = summed over layers
+    mode: str
+    steps: int
+    skipped_tiles: int
+    computed_tiles: int
+    skipped_macs: float
+    computed_macs: float
+    skipped_weight_bytes: float
+    total_weight_bytes: float
+    reused_out_elems: float
+    dma_issued_tiles: int
+    mode_transitions: int
+    slot_hit_rates: list[float]
+    slot_steps: list[int]      # lanes with 0 steps are excluded from hit_rate
+
+    @property
+    def total_tiles(self) -> int:
+        return self.skipped_tiles + self.computed_tiles
+
+    @property
+    def tile_skip_rate(self) -> float:
+        return self.skipped_tiles / max(self.total_tiles, 1)
+
+    @property
+    def total_macs(self) -> float:
+        return self.skipped_macs + self.computed_macs
+
+    @property
+    def mac_skip_rate(self) -> float:
+        return self.skipped_macs / max(self.total_macs, 1e-9)
+
+    @property
+    def weight_byte_skip_rate(self) -> float:
+        return self.skipped_weight_bytes / max(self.total_weight_bytes, 1e-9)
+
+    @property
+    def hit_rate(self) -> float:
+        """Mean per-slot hit rate over ACTIVE lanes (slot_steps > 0).
+
+        Caveat (slot-batched serving): a freed slot keeps decoding its stale
+        token until the next admission resets it, so long idle gaps still
+        accumulate lane history; per-request truth is the retirement
+        telemetry, which snapshots before the lane goes idle."""
+        active = [r for r, s in zip(self.slot_hit_rates, self.slot_steps) if s > 0]
+        return float(np.mean(active)) if active else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(
+            total_tiles=self.total_tiles,
+            tile_skip_rate=self.tile_skip_rate,
+            total_macs=self.total_macs,
+            mac_skip_rate=self.mac_skip_rate,
+            weight_byte_skip_rate=self.weight_byte_skip_rate,
+            hit_rate=self.hit_rate,
+        )
+        return d
+
+
+@dataclasses.dataclass
+class SensorReport:
+    """Measured reuse accounting for a whole model at one point in time."""
+
+    per_site: list[SiteSensor]
+    per_layer: list[SiteSensor]
+    model: dict[str, Any]
+
+    def summary_lines(self) -> list[str]:
+        lines = [
+            "SensorReport model: "
+            f"steps={self.model['steps']} "
+            f"mac_skip={self.model['mac_skip_rate']:.1%} "
+            f"weight_byte_skip={self.model['weight_byte_skip_rate']:.1%} "
+            f"tile_skip={self.model['tile_skip_rate']:.1%} "
+            f"hit_rate={self.model['hit_rate']:.3f}"
+        ]
+        for s in self.per_site:
+            lines.append(
+                f"  {s.site:24s} mode={s.mode:5s} steps={s.steps:4d} "
+                f"tile_skip={s.tile_skip_rate:6.1%} "
+                f"mac_skip={s.mac_skip_rate:6.1%} "
+                f"hit={s.hit_rate:.3f} transitions={s.mode_transitions}"
+            )
+        return lines
+
+    def to_dicts(self) -> list[dict[str, Any]]:
+        rows = [dict(self.model, kind="model")]
+        rows += [dict(s.to_dict(), kind="site") for s in self.per_site]
+        rows += [dict(s.to_dict(), kind="layer") for s in self.per_layer]
+        return rows
+
+    def write_jsonl(self, path: str, *, mode: str = "a") -> None:
+        with open(path, mode) as f:
+            for row in self.to_dicts():
+                f.write(json.dumps(row) + "\n")
+
+
+def _entry_rows(name: str, mode: str, entry: dict) -> list[SiteSensor]:
+    """One SiteSensor per leading-layer slice of a cache entry's counters."""
+    sensor = entry["sensor"]
+    skipped = np.asarray(sensor["skipped_tiles"])
+    stacked = skipped.ndim >= 1
+    n_layers = skipped.shape[0] if stacked else 1
+
+    def leaf(key, layer):
+        a = np.asarray(sensor[key])
+        return a[layer] if stacked else a
+
+    steps = np.asarray(entry["steps"])
+    rows = []
+    for layer in range(n_layers):
+        hit_sum = np.asarray(leaf("slot_hit_sum", layer), np.float64)
+        slot_steps = np.asarray(leaf("slot_steps", layer), np.int64)
+        rows.append(SiteSensor(
+            site=name,
+            layer=layer if stacked else None,
+            mode=mode,
+            steps=int(steps[layer] if stacked and steps.ndim else np.max(steps)),
+            skipped_tiles=int(leaf("skipped_tiles", layer)),
+            computed_tiles=int(leaf("computed_tiles", layer)),
+            skipped_macs=float(leaf("skipped_macs", layer)),
+            computed_macs=float(leaf("computed_macs", layer)),
+            skipped_weight_bytes=float(leaf("skipped_weight_bytes", layer)),
+            total_weight_bytes=float(leaf("total_weight_bytes", layer)),
+            reused_out_elems=float(leaf("reused_out_elems", layer)),
+            dma_issued_tiles=int(leaf("dma_issued_tiles", layer)),
+            mode_transitions=int(leaf("mode_transitions", layer)),
+            slot_hit_rates=list(hit_sum / np.maximum(slot_steps, 1)),
+            slot_steps=[int(s) for s in slot_steps],
+        ))
+    return rows
+
+
+def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
+    hit = np.mean([r.slot_hit_rates for r in rows], axis=0)
+    lane_steps = np.max([r.slot_steps for r in rows], axis=0)
+    return SiteSensor(
+        site=name,
+        layer=None,
+        mode=mode,
+        steps=max(r.steps for r in rows),
+        skipped_tiles=sum(r.skipped_tiles for r in rows),
+        computed_tiles=sum(r.computed_tiles for r in rows),
+        skipped_macs=sum(r.skipped_macs for r in rows),
+        computed_macs=sum(r.computed_macs for r in rows),
+        skipped_weight_bytes=sum(r.skipped_weight_bytes for r in rows),
+        total_weight_bytes=sum(r.total_weight_bytes for r in rows),
+        reused_out_elems=sum(r.reused_out_elems for r in rows),
+        dma_issued_tiles=sum(r.dma_issued_tiles for r in rows),
+        mode_transitions=sum(r.mode_transitions for r in rows),
+        slot_hit_rates=list(np.asarray(hit, np.float64)),
+        slot_steps=[int(s) for s in lane_steps],
+    )
+
+
+def build_report(engine, cache: dict[str, Any]) -> SensorReport:
+    """Reduce a reuse cache's sensor counters. `engine` supplies site specs
+    and current kernelModes (duck-typed: .sites / .modes)."""
+    per_site, per_layer = [], []
+    for name in engine.sites:
+        entry = cache[name]
+        if "sensor" not in entry:
+            continue
+        rows = _entry_rows(name, engine.modes[name], entry)
+        if rows[0].layer is not None:
+            per_layer += rows
+        per_site.append(_sum_rows(name, engine.modes[name], rows))
+
+    tot = {
+        k: sum(getattr(s, k) for s in per_site)
+        for k in ("skipped_tiles", "computed_tiles", "skipped_macs",
+                  "computed_macs", "skipped_weight_bytes", "total_weight_bytes",
+                  "reused_out_elems", "mode_transitions")
+    }
+    total_tiles = tot["skipped_tiles"] + tot["computed_tiles"]
+    total_macs = tot["skipped_macs"] + tot["computed_macs"]
+    model = dict(
+        tot,
+        steps=max((s.steps for s in per_site), default=0),
+        n_sites=len(per_site),
+        total_tiles=total_tiles,
+        tile_skip_rate=tot["skipped_tiles"] / max(total_tiles, 1),
+        total_macs=total_macs,
+        mac_skip_rate=tot["skipped_macs"] / max(total_macs, 1e-9),
+        weight_byte_skip_rate=(
+            tot["skipped_weight_bytes"] / max(tot["total_weight_bytes"], 1e-9)
+        ),
+        hit_rate=float(np.mean([s.hit_rate for s in per_site])) if per_site else 0.0,
+    )
+    return SensorReport(per_site=per_site, per_layer=per_layer, model=model)
+
+
+def slot_telemetry(engine, cache: dict[str, Any], slot: int) -> dict[str, Any]:
+    """Per-request telemetry for one serving slot (read at retirement).
+
+    Reads ONLY the slot's per-site hit-rate lanes (two small [M] transfers per
+    site) — cheap enough for the scheduler's retirement path. Tile/MAC skips
+    are batch-granular (one tile spans block_m rows), so they live in the
+    model-level `build_report`, not here.
+    """
+    hit_sums, steps = [], 0
+    for name in engine.sites:
+        sensor = cache[name].get("sensor")
+        if sensor is None:
+            continue
+        hs = np.asarray(sensor["slot_hit_sum"], np.float64)[..., slot]
+        ss = np.asarray(sensor["slot_steps"], np.float64)[..., slot]
+        hit_sums.append(float(np.sum(hs) / max(float(np.sum(ss)), 1.0))
+                        if np.sum(ss) else 0.0)
+        steps = max(steps, int(np.max(ss)))
+    return {
+        "slot": slot,
+        "steps": steps,
+        "hit_rate": float(np.mean(hit_sums)) if hit_sums else 0.0,
+        "n_sites": len(hit_sums),
+    }

@@ -1,0 +1,142 @@
+"""Per-site sensor counters — the measured reuse-accounting state.
+
+The counters ride INSIDE each reuse-cache entry (under the ``"sensor"`` key),
+so they thread through `jax.lax.scan` over layers, donate, shard and
+checkpoint exactly like the rest of the cache pytree. Updates happen on the
+traced reuse path and cost a handful of reductions over the (tiny) tile mask
+per call — negligible next to the GEMM they account for.
+
+Accounting convention (documented once, used everywhere):
+
+* Tile counters are exact integers on the PADDED tile grid the kernel actually
+  executes: a site call with inputs [M, K] and weights [K, N] runs
+  ``gm = ceil(M/block_m)`` × ``gk = ceil(K/block_k)`` delta tiles, each worth
+  ``block_m · block_k · N`` MACs (the tile is contracted against the full N).
+* ``skipped_tiles + computed_tiles == steps · gm · gk`` — counter conservation,
+  property-tested in tests/test_sensor.py. Basic-mode calls count every tile
+  as computed (the basic kernel skips nothing), so conservation holds across
+  mode flips.
+* Weight-load accounting is against the dense baseline, which streams the
+  site's [K, N] weight panel once per m-row-block per step:
+  ``total_weight_bytes = steps · gm · gk · block_k · N · itemsize``.
+* MAC/byte accumulators are f32: exact for test-scale counts (< 2^24 per
+  increment granularity) and telemetry-grade beyond that.
+
+Per-slot state (``slot_hit_sum``/``slot_steps``, shape [M]) survives inside
+the entry so the serving scheduler can reset exactly one lane when a slot is
+recycled and read per-request hit rates at retirement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_site_counters(batch: int) -> dict[str, jax.Array]:
+    """Fresh counter pytree for one reuse site (one cache entry)."""
+    return {
+        "skipped_tiles": jnp.zeros((), jnp.int32),
+        "computed_tiles": jnp.zeros((), jnp.int32),
+        "skipped_macs": jnp.zeros((), jnp.float32),
+        "computed_macs": jnp.zeros((), jnp.float32),
+        "skipped_weight_bytes": jnp.zeros((), jnp.float32),
+        "total_weight_bytes": jnp.zeros((), jnp.float32),
+        "reused_out_elems": jnp.zeros((), jnp.float32),
+        "dma_issued_tiles": jnp.zeros((), jnp.int32),
+        # kernelMode tracking: -1 = never evaluated, 0 = basic, 1 = reuse.
+        "mode_flag": jnp.full((), -1, jnp.int32),
+        "mode_transitions": jnp.zeros((), jnp.int32),
+        # per-slot hit-rate accumulators (reset per lane on slot recycle)
+        "slot_hit_sum": jnp.zeros((batch,), jnp.float32),
+        "slot_steps": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _mode_bookkeeping(sensor: dict, flag: int) -> tuple[jax.Array, jax.Array]:
+    prev = sensor["mode_flag"]
+    flipped = (prev >= 0) & (prev != flag)
+    transitions = sensor["mode_transitions"] + flipped.astype(jnp.int32)
+    return jnp.full((), flag, jnp.int32), transitions
+
+
+def update_on_reuse(
+    sensor: dict[str, jax.Array],
+    *,
+    block_mask: jax.Array,    # [gm, gk] int32; 1 = tile computed
+    row_sim: jax.Array,       # [M] per-slot code-match fraction this call
+    block_m: int,
+    block_k: int,
+    n: int,
+    gn: int,
+    w_itemsize: int,
+    dma_issued: jax.Array | None = None,  # measured DMA count (kernel semantics)
+) -> dict[str, jax.Array]:
+    """Account one reuse-mode evaluation from its tile mask.
+
+    dma_issued_tiles is in (block_k × block_n) weight-tile units everywhere
+    (a dense stream of the site is gm·gk·gn such tiles per step), so the
+    counter stays comparable across mode flips."""
+    gm, gk = block_mask.shape
+    computed = jnp.sum(block_mask).astype(jnp.int32)
+    total = jnp.int32(gm * gk)
+    skipped = total - computed
+    macs_per_tile = float(block_m * block_k * n)
+    tile_w_bytes = float(block_k * n * w_itemsize)
+    # m-row-blocks whose entire k-row of tiles is skipped pass their output
+    # through untouched: block_m · N output elements fully reused.
+    rows_all_skipped = jnp.sum(jnp.all(block_mask == 0, axis=1)).astype(jnp.float32)
+    mode_flag, transitions = _mode_bookkeeping(sensor, 1)
+    return dict(
+        sensor,
+        skipped_tiles=sensor["skipped_tiles"] + skipped,
+        computed_tiles=sensor["computed_tiles"] + computed,
+        skipped_macs=sensor["skipped_macs"] + skipped.astype(jnp.float32) * macs_per_tile,
+        computed_macs=sensor["computed_macs"] + computed.astype(jnp.float32) * macs_per_tile,
+        skipped_weight_bytes=sensor["skipped_weight_bytes"]
+        + skipped.astype(jnp.float32) * tile_w_bytes,
+        total_weight_bytes=sensor["total_weight_bytes"]
+        + jnp.float32(gm * gk) * tile_w_bytes,
+        reused_out_elems=sensor["reused_out_elems"]
+        + rows_all_skipped * float(block_m * n),
+        dma_issued_tiles=sensor["dma_issued_tiles"]
+        + (dma_issued.astype(jnp.int32) if dma_issued is not None
+           else computed * gn),
+        mode_flag=mode_flag,
+        mode_transitions=transitions,
+        slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),
+        slot_steps=sensor["slot_steps"] + 1,
+    )
+
+
+def update_on_basic(
+    sensor: dict[str, jax.Array],
+    *,
+    row_sim: jax.Array,       # [M]
+    m: int,
+    k: int,
+    n: int,
+    gn: int,
+    block_m: int,
+    block_k: int,
+    w_itemsize: int,
+) -> dict[str, jax.Array]:
+    """Account one basic-mode (reuse-OFF) evaluation: everything computed.
+    The dense kernel streams every weight tile: gm·gk·gn DMA units."""
+    gm = -(-m // block_m)
+    gk = -(-k // block_k)
+    total = gm * gk
+    macs_per_tile = float(block_m * block_k * n)
+    tile_w_bytes = float(block_k * n * w_itemsize)
+    mode_flag, transitions = _mode_bookkeeping(sensor, 0)
+    return dict(
+        sensor,
+        computed_tiles=sensor["computed_tiles"] + jnp.int32(total),
+        computed_macs=sensor["computed_macs"] + float(total) * macs_per_tile,
+        total_weight_bytes=sensor["total_weight_bytes"] + float(total) * tile_w_bytes,
+        dma_issued_tiles=sensor["dma_issued_tiles"] + jnp.int32(total * gn),
+        mode_flag=mode_flag,
+        mode_transitions=transitions,
+        slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),
+        slot_steps=sensor["slot_steps"] + 1,
+    )

@@ -1,0 +1,110 @@
+"""Measured-decode harness: run real decode steps, return the SensorReport.
+
+This is the shared driver behind ``benchmarks/energy.py --measured``,
+``benchmarks/speedup.py --measured`` and ``benchmarks/software_reuse.py
+--measured``: a reduced-scale model decodes a correlated token stream with
+the reuse engine threaded, and the report comes from the live counters the
+kernels' tile masks produced — not from any assumed similarity table.
+
+The correlated stream mirrors benchmarks/similarity.py: with probability
+`correlation` the next token re-anchors to a fixed token, otherwise it follows
+the model's own greedy output. High correlation ⇒ consecutive activations
+quantize to similar codes ⇒ measurable tile skips, which is the operating
+regime the paper measures (Table I).
+
+Kept separate from ``repro.sensor.__init__`` on purpose: importing this module
+pulls in the serving stack, and ``repro.core.engine`` imports the sensor
+package — a cycle if the runner were re-exported there.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import init_params
+from repro.serve.serve_step import (
+    build_reuse_engine,
+    decode_step,
+    greedy_sample,
+    init_serve_state,
+)
+
+
+# The measured-benchmark operating points: (arch, stream correlation). One
+# table so energy/speedup/software_reuse measure the same regime — correlation
+# is the stream knob, everything downstream comes from the counters.
+MEASURED_OPERATING_POINTS = [
+    ("qwen3-32b", 0.95),
+    ("mixtral-8x7b", 0.9),
+    ("rwkv6-7b", 0.95),
+]
+
+
+@dataclasses.dataclass
+class MeasuredDecode:
+    arch: str
+    steps: int
+    batch: int
+    engine: object
+    cache: dict
+    report: object          # SensorReport
+
+    @property
+    def skip_fractions(self):
+        from repro.sensor.cost_model import measured_skip_fractions
+
+        return measured_skip_fractions(self.report)
+
+
+def run_measured_decode(
+    arch: str,
+    *,
+    steps: int = 10,
+    batch: int = 2,
+    cache_len: int = 64,
+    correlation: float = 0.9,
+    seed: int = 0,
+    reduced: bool = True,
+    refresh_policy: bool = False,
+) -> MeasuredDecode:
+    """Decode `steps` tokens on a (reduced) arch and harvest sensor counters.
+
+    refresh_policy=True re-runs the host-side mode policy between steps, so
+    low-similarity sites demote to basic mode mid-run (mode_transitions then
+    measures real policy churn); False pins the registration-time modes, which
+    keeps every site on the reuse path — the right setting when the point is
+    to measure skip rates.
+    """
+    cfg = ARCHS[arch]
+    if reduced:
+        cfg = cfg.reduced()
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    engine = build_reuse_engine(cfg, impl="jnp")
+    rcache = engine.init_cache(batch)
+    state = init_serve_state(cfg, batch, cache_len)
+
+    anchor = rng.integers(0, cfg.vocab, (batch, 1)).astype(np.int32)
+    tok = jax.numpy.asarray(anchor)
+    for _ in range(steps):
+        logits, state, rcache = decode_step(
+            params, cfg, tok, state, engine=engine, reuse_cache=rcache
+        )
+        if refresh_policy:
+            engine.refresh_modes(rcache)
+        nxt = np.asarray(greedy_sample(logits))[:, :1]
+        keep = rng.random((batch, 1)) < correlation
+        tok = jax.numpy.asarray(np.where(keep, anchor, nxt).astype(np.int32))
+
+    return MeasuredDecode(
+        arch=arch,
+        steps=steps,
+        batch=batch,
+        engine=engine,
+        cache=rcache,
+        report=engine.sensor_report(rcache),
+    )

@@ -33,22 +33,34 @@ class Request:
     output: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    telemetry: dict | None = None  # per-request sensor snapshot at retirement
 
 
 def reset_slot(reuse_cache: dict | None, slot: int) -> dict | None:
-    """Zero one slot's reuse lane across all sites (stream handoff)."""
+    """Zero one slot's reuse lane across all sites (stream handoff).
+
+    Beyond prev_q/prev_out, the per-slot policy and sensor lanes reset too:
+    sim_ema is per-slot ([M]) so a recycled slot must not inherit the previous
+    occupant's similarity history (the policy reads the mean across lanes),
+    and the sensor's slot_hit_sum/slot_steps lanes restart so retirement
+    telemetry covers exactly one request's residency."""
     if reuse_cache is None:
         return None
 
-    def zero_slot(leaf, name):
-        if name in ("prev_q", "prev_out"):
-            return leaf.at[..., slot, :].set(0)
-        return leaf
+    def reset_entry(entry):
+        e = dict(entry)
+        e["prev_q"] = entry["prev_q"].at[..., slot, :].set(0)
+        e["prev_out"] = entry["prev_out"].at[..., slot, :].set(0)
+        if entry["sim_ema"].ndim >= 1:  # per-slot lanes (scalar = legacy)
+            e["sim_ema"] = entry["sim_ema"].at[..., slot].set(0)
+        if "sensor" in entry:
+            s = dict(entry["sensor"])
+            s["slot_hit_sum"] = s["slot_hit_sum"].at[..., slot].set(0)
+            s["slot_steps"] = s["slot_steps"].at[..., slot].set(0)
+            e["sensor"] = s
+        return e
 
-    return {
-        site: {k: zero_slot(v, k) for k, v in entry.items()}
-        for site, entry in reuse_cache.items()
-    }
+    return {site: reset_entry(entry) for site, entry in reuse_cache.items()}
 
 
 class ContinuousBatcher:
@@ -59,11 +71,15 @@ class ContinuousBatcher:
         prefill_fn: Callable,     # (slot_tokens [1, S], slot) -> first token
         decode_fn: Callable,      # (tokens [B, 1]) -> next tokens [B, 1]
         max_steps: int = 512,
+        telemetry_fn: Callable | None = None,  # (slot) -> dict, at retirement
+        on_retire: Callable | None = None,     # (Request) -> None
     ):
         self.batch_slots = batch_slots
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.max_steps = max_steps
+        self.telemetry_fn = telemetry_fn
+        self.on_retire = on_retire
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.free_slots = list(range(batch_slots))
@@ -86,8 +102,14 @@ class ContinuousBatcher:
     def _retire(self, slot: int) -> None:
         req = self.active.pop(slot)
         req.done = True
+        # Snapshot per-request reuse telemetry BEFORE the slot is freed (the
+        # next occupant's prefill resets the slot's sensor lanes).
+        if self.telemetry_fn is not None:
+            req.telemetry = self.telemetry_fn(slot)
         self.completed.append(req)
         self.free_slots.append(slot)
+        if self.on_retire is not None:
+            self.on_retire(req)
 
     def run(self) -> list[Request]:
         cur = np.zeros((self.batch_slots, 1), np.int32)

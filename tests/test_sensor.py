@@ -1,0 +1,183 @@
+"""repro.sensor — measured telemetry invariants.
+
+Three load-bearing properties:
+1. cold start — step 0 skips nothing and the reuse output equals the
+   quantized dense (basic-kernel) output;
+2. counter conservation — skipped + computed tiles/MACs always account for
+   every tile the (padded) grid executes, across mode flips;
+3. serving — per-request telemetry survives slot recycling: a recycled slot's
+   lanes restart, so a retired request reports its own residency only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ReuseEngine
+from repro.sensor.aggregate import slot_telemetry
+from repro.sensor.cost_model import measured_skip_fractions, sensor_energy
+from repro.serve.scheduler import ContinuousBatcher, Request, reset_slot
+
+
+def make_site(batch=4, k=512, n=256, seed=0):
+    eng = ReuseEngine()
+    eng.register("site", k, n)
+    cache = eng.init_cache(batch)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return eng, cache, w, rng
+
+
+def test_cold_start_zero_skips_and_matches_quantized_dense():
+    eng, cache, w, rng = make_site()
+    # |x| ~ N(0,1) with scale 0.05: whole-tile-zero deltas are impossible
+    x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    out, entry, _ = eng.apply("site", x, w, None, cache["site"])
+    s = entry["sensor"]
+    assert int(s["skipped_tiles"]) == 0
+    assert float(s["skipped_macs"]) == 0.0
+    assert float(s["skipped_weight_bytes"]) == 0.0
+    assert int(entry["steps"]) == 1
+
+    # fresh cache in basic (quantized dense) mode must give the same output
+    eng2 = ReuseEngine()
+    eng2.register("site", 512, 256, mode="basic")
+    cache2 = eng2.init_cache(4)
+    out2, _, _ = eng2.apply("site", x, w, None, cache2["site"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_counter_conservation_across_steps_and_modes():
+    eng, cache, w, rng = make_site(batch=8, k=512, n=256)
+    spec = eng.sites["site"]
+    gm = -(-8 // spec.block_m)
+    gk = -(-512 // spec.block_k)
+    macs_per_tile = spec.block_m * spec.block_k * 256
+
+    entry = cache["site"]
+    x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+    steps = 0
+    for i in range(6):
+        mode = "basic" if i == 3 else "reuse"  # mode flip mid-run
+        eng.modes["site"] = mode
+        if i in (2, 4):  # repeat the first k-block => that tile skips
+            x = x.at[:, 256:].set(
+                jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32)))
+        else:
+            x = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+        _, entry, _ = eng.apply("site", x, w, None, entry)
+        steps += 1
+
+    s = entry["sensor"]
+    total_tiles = int(s["skipped_tiles"]) + int(s["computed_tiles"])
+    assert total_tiles == steps * gm * gk
+    total_macs = float(s["skipped_macs"]) + float(s["computed_macs"])
+    assert total_macs == steps * gm * gk * macs_per_tile
+    assert float(s["total_weight_bytes"]) == steps * gm * gk * (
+        spec.block_k * 256 * w.dtype.itemsize
+    )
+    # the mid-run reuse->basic->reuse flip is measured
+    assert int(s["mode_transitions"]) == 2
+    assert np.all(np.asarray(s["slot_steps"]) == steps)
+
+    cache["site"] = entry
+    report = eng.sensor_report(cache)
+    assert report.model["total_tiles"] == total_tiles
+    assert 0.0 <= report.model["tile_skip_rate"] <= 1.0
+    fr = measured_skip_fractions(report)
+    e = sensor_energy(report)
+    assert 0.0 <= fr["mac_skip_rate"] <= 1.0
+    assert e["baseline_dynamic_j"] > 0
+
+
+def test_full_identical_input_skips_everything():
+    eng, cache, w, rng = make_site()
+    x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    _, entry, _ = eng.apply("site", x, w, None, cache["site"])
+    _, entry, st = eng.apply("site", x, w, None, entry)
+    assert float(st.skip_fraction) == 1.0
+    s = entry["sensor"]
+    # step 2's tiles all skipped; step 1's all computed
+    assert int(s["skipped_tiles"]) == int(s["computed_tiles"])
+    # the fully-skipped rows reused their whole output panel
+    assert float(s["reused_out_elems"]) > 0
+
+
+def test_sensor_report_jsonl_roundtrip(tmp_path):
+    eng, cache, w, rng = make_site()
+    x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+    _, cache["site"], _ = eng.apply("site", x, w, None, cache["site"])
+    report = eng.sensor_report(cache)
+    path = tmp_path / "sensor.jsonl"
+    report.write_jsonl(str(path))
+    import json
+
+    rows = [json.loads(line) for line in path.read_text().splitlines()]
+    kinds = {r["kind"] for r in rows}
+    assert "model" in kinds and "site" in kinds
+    assert rows[0]["steps"] == 1
+
+
+def test_reset_slot_resets_policy_and_sensor_lanes():
+    eng = ReuseEngine()
+    eng.register("site", 64, 32, n_layers=2)
+    cache = eng.init_cache(batch=3)
+    e = cache["site"]
+    e["sim_ema"] = jnp.ones_like(e["sim_ema"])
+    e["sensor"]["slot_hit_sum"] = jnp.ones_like(e["sensor"]["slot_hit_sum"])
+    e["sensor"]["slot_steps"] = jnp.full_like(e["sensor"]["slot_steps"], 7)
+    out = reset_slot(cache, slot=1)["site"]
+    ema = np.asarray(out["sim_ema"])          # [2, 3]
+    assert np.all(ema[:, 1] == 0) and np.all(ema[:, (0, 2)] == 1)
+    hs = np.asarray(out["sensor"]["slot_hit_sum"])
+    ss = np.asarray(out["sensor"]["slot_steps"])
+    assert np.all(hs[:, 1] == 0) and np.all(hs[:, (0, 2)] == 1)
+    assert np.all(ss[:, 1] == 0) and np.all(ss[:, (0, 2)] == 7)
+
+
+def test_scheduler_telemetry_survives_slot_recycling():
+    """Five requests through two slots with a real single-site reuse model:
+    every retired request carries telemetry for ITS residency only."""
+    slots, k, n = 2, 256, 128
+    eng = ReuseEngine()
+    eng.register("site", k, n)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    state = {"cache": eng.init_cache(slots)}
+
+    def tokens_to_x(tokens):
+        # deterministic per-token activation: slot streams with repeated
+        # tokens show high similarity
+        base = np.asarray(tokens, np.float32).reshape(slots, 1)
+        return jnp.asarray(np.tile(base, (1, k)) * 0.01 + 1.0)
+
+    def prefill_fn(prompt, slot):
+        state["cache"] = reset_slot(state["cache"], slot)
+        return int(prompt[0, -1]) % 50
+
+    def decode_fn(tokens):
+        x = tokens_to_x(tokens)
+        _, entry, _ = eng.apply("site", x, w, None, state["cache"]["site"])
+        state["cache"]["site"] = entry
+        return (tokens + 1) % 50
+
+    max_new = 4
+    b = ContinuousBatcher(
+        batch_slots=slots, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        max_steps=100,
+        telemetry_fn=lambda slot: slot_telemetry(eng, state["cache"], slot),
+    )
+    for i in range(5):
+        b.submit(Request(rid=i, prompt=np.asarray([i, i + 1], np.int32),
+                         max_new_tokens=max_new))
+    done = b.run()
+    assert len(done) == 5
+    total_steps = b.stats["steps"]
+    for req in done:
+        assert req.telemetry is not None
+        assert req.telemetry["slot"] == req.slot
+        assert 1 <= req.telemetry["steps"] <= max_new
+        # recycled slots must NOT report cumulative history
+        assert req.telemetry["steps"] < total_steps
+        assert 0.0 <= req.telemetry["hit_rate"] <= 1.0
