@@ -22,3 +22,54 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def iter_measured_runs(*, steps: int, batch: int,
+                       tuned_policy: str | None = None, archs=None):
+    """Yield (arch, policy_label, MeasuredDecode) for each measured operating
+    point × policy — the shared driver behind the tuned-vs-default modes of
+    benchmarks/{speedup,energy}.py.
+
+    With `tuned_policy` (a repro.tune table JSON) each arch runs twice,
+    "default" then "tuned", both with the host-side mode refresh live (the
+    comparison is between live policies, not pinned modes). Unknown names in
+    `archs` are an error — a silently-empty filter would let CI pass while
+    measuring nothing."""
+    from repro.sensor.runner import MEASURED_OPERATING_POINTS, run_measured_decode
+
+    known = [a for a, _ in MEASURED_OPERATING_POINTS]
+    if archs is not None:
+        unknown = sorted(set(archs) - set(known))
+        if unknown:
+            raise SystemExit(
+                f"unknown measured arch(s) {unknown}; operating points "
+                f"exist for {known}")
+    policies = [("default", None)]
+    if tuned_policy is not None:
+        from repro.tune.table import load_tuned_policy
+
+        policies.append(("tuned", load_tuned_policy(tuned_policy)))
+    refresh = tuned_policy is not None
+    for arch, corr in MEASURED_OPERATING_POINTS:
+        if archs is not None and arch not in archs:
+            continue
+        for label, pol in policies:
+            yield arch, label, run_measured_decode(
+                arch, steps=steps, batch=batch, correlation=corr,
+                policy=pol, refresh_policy=refresh)
+
+
+def measured_cli(description: str):
+    """Parsed args for the measured benchmark CLIs (shared flag set)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--measured", action="store_true")
+    ap.add_argument("--tuned-policy", default=None,
+                    help="tuned-table JSON (python -m repro.tune.fit output); "
+                    "adds a tuned-policy run and reports tuned-vs-default "
+                    "deltas (implies --measured)")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--archs", nargs="*", default=None)
+    return ap.parse_args()

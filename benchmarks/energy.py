@@ -58,14 +58,19 @@ def analytic(emit):
     return rows
 
 
-def measured(emit, *, steps: int = 10, batch: int = 2):
-    """Energy accounting from live sensor counters (no PAPER_SIMILARITY)."""
-    from repro.sensor.runner import MEASURED_OPERATING_POINTS, run_measured_decode
+def measured(emit, *, steps: int = 10, batch: int = 2,
+             tuned_policy: str | None = None, archs=None):
+    """Energy accounting from live sensor counters (no PAPER_SIMILARITY).
+
+    With `tuned_policy`, each arch is measured under both the default
+    global-constant policy and the tuned per-site table (mode refresh live
+    for both) and the reduction delta is reported."""
+    from benchmarks.common import iter_measured_runs
 
     rows = []
-    for arch, corr in MEASURED_OPERATING_POINTS:
-        md = run_measured_decode(arch, steps=steps, batch=batch,
-                                 correlation=corr)
+    per_arch: dict[str, dict] = {}
+    for arch, label, md in iter_measured_runs(
+            steps=steps, batch=batch, tuned_policy=tuned_policy, archs=archs):
         e = sensor_energy(md.report)
         fr = md.skip_fractions
         # project the measured harvest through the full-model roofline
@@ -76,26 +81,37 @@ def measured(emit, *, steps: int = 10, batch: int = 2):
             cfg, cell, POD_MESH,
             reuse_skip_fraction=fr["weight_byte_skip_rate"]))
         red = 1 - reuse["total"] / base["total"]
-        rows.append((arch, fr, e, red))
-        emit(f"energy/measured_{arch}", 0.0,
+        per_arch.setdefault(arch, {})[label] = (e, red)
+        suffix = "" if label == "default" else "_tuned"
+        emit(f"energy/measured_{arch}{suffix}", 0.0,
              f"measured_tile_skip={fr['tile_skip_rate']:.1%};"
              f"measured_hit_rate={fr['hit_rate']:.3f};"
              f"site_dynamic_reduction={e['dynamic_reduction']:.1%};"
              f"saved_dynamic_j={e['saved_dynamic_j']:.3e};"
              f"projected_total_reduction={red:.1%} "
              f"(from sensor counters over {steps} real decode steps)")
+        rows.append((arch, label, fr, e, red))
+        if label == "tuned":
+            (e_d, red_d), (e_t, red_t) = per_arch[arch]["default"], (e, red)
+            emit(f"energy/tuned_delta_{arch}", 0.0,
+                 f"dynamic_reduction {e_d['dynamic_reduction']:.1%}->"
+                 f"{e_t['dynamic_reduction']:.1%};"
+                 f"projected_total {red_d:.1%}->{red_t:.1%}")
     return rows
 
 
-def main(emit, *, measured_mode: bool = False):
+def main(emit, *, measured_mode: bool = False, tuned_policy: str | None = None,
+         steps: int = 10, batch: int = 2, archs=None):
     if measured_mode:
-        return measured(emit)
+        return measured(emit, steps=steps, batch=batch,
+                        tuned_policy=tuned_policy, archs=archs)
     return analytic(emit)
 
 
 if __name__ == "__main__":
-    import sys
+    from benchmarks.common import emit, measured_cli
 
-    from benchmarks.common import emit
-
-    main(emit, measured_mode="--measured" in sys.argv)
+    args = measured_cli("Fig. 13/14 energy: analytic or measured reduction")
+    main(emit, measured_mode=args.measured or bool(args.tuned_policy),
+         tuned_policy=args.tuned_policy, steps=args.steps, batch=args.batch,
+         archs=args.archs)

@@ -87,17 +87,21 @@ def modeled_tpu(emit):
     return rows
 
 
-def measured_decode(emit, *, steps: int = 10, batch: int = 2):
+def measured_decode(emit, *, steps: int = 10, batch: int = 2,
+                    tuned_policy: str | None = None, archs=None):
     """Sensor-counter-driven speedup: run real decode steps, read the skip
     rates the kernels actually achieved, and feed THOSE to the roofline
-    model (plus the site-local roofline speedup from the cost model)."""
-    from repro.sensor.cost_model import sensor_speedup
-    from repro.sensor.runner import MEASURED_OPERATING_POINTS, run_measured_decode
+    model (plus the site-local roofline speedup from the cost model).
 
-    rows = []
-    for arch, corr in MEASURED_OPERATING_POINTS:
-        md = run_measured_decode(arch, steps=steps, batch=batch,
-                                 correlation=corr)
+    With `tuned_policy` (a repro.tune table JSON), each arch runs twice —
+    default global-constant policy vs tuned per-site policy, both with the
+    host-side mode refresh live — and the delta is reported."""
+    from benchmarks.common import iter_measured_runs
+    from repro.sensor.cost_model import sensor_speedup
+
+    per_arch: dict[str, dict] = {}
+    for arch, label, md in iter_measured_runs(
+            steps=steps, batch=batch, tuned_policy=tuned_policy, archs=archs):
         fr = md.skip_fractions
         sp_site = sensor_speedup(md.report)
         cfg = ARCHS[arch]
@@ -106,27 +110,38 @@ def measured_decode(emit, *, steps: int = 10, batch: int = 2):
         reuse = cell_cost(cfg, cell, POD_MESH,
                           reuse_skip_fraction=fr["weight_byte_skip_rate"])
         sp = base.step_s / reuse.step_s
-        rows.append((arch, fr, sp))
-        emit(f"speedup/measured_decode_{arch}", base.step_s * 1e6,
+        per_arch.setdefault(arch, {})[label] = (fr, sp)
+        suffix = "" if label == "default" else "_tuned"
+        emit(f"speedup/measured_decode_{arch}{suffix}", base.step_s * 1e6,
              f"measured_weight_byte_skip={fr['weight_byte_skip_rate']:.1%};"
              f"measured_tile_skip={fr['tile_skip_rate']:.1%};"
              f"site_roofline_speedup={sp_site['site_speedup']:.2f}x;"
              f"projected_step_speedup={sp:.2f}x "
              f"(from sensor counters over {steps} real decode steps)")
-    return rows
+        if label == "tuned":
+            (fr_d, sp_d), (fr_t, sp_t) = per_arch[arch]["default"], (fr, sp)
+            emit(f"speedup/tuned_delta_{arch}", 0.0,
+                 f"mac_skip {fr_d['mac_skip_rate']:.1%}->"
+                 f"{fr_t['mac_skip_rate']:.1%};"
+                 f"projected_speedup {sp_d:.2f}x->{sp_t:.2f}x")
+    return sorted(per_arch.items())
 
 
-def main(emit, *, measured_mode: bool = False):
+def main(emit, *, measured_mode: bool = False, tuned_policy: str | None = None,
+         steps: int = 10, batch: int = 2, archs=None):
     if measured_mode:
-        return {"measured_decode": measured_decode(emit)}
+        return {"measured_decode": measured_decode(
+            emit, steps=steps, batch=batch, tuned_policy=tuned_policy,
+            archs=archs)}
     a = measured_sweep(emit)
     b = modeled_tpu(emit)
     return {"measured": a, "modeled": b}
 
 
 if __name__ == "__main__":
-    import sys
+    from benchmarks.common import emit, measured_cli
 
-    from benchmarks.common import emit
-
-    main(emit, measured_mode="--measured" in sys.argv)
+    args = measured_cli("Fig. 10 speedup: analytic sweep or measured decode")
+    main(emit, measured_mode=args.measured or bool(args.tuned_policy),
+         tuned_policy=args.tuned_policy, steps=args.steps, batch=args.batch,
+         archs=args.archs)

@@ -9,6 +9,8 @@ Public API surface:
   repro.models    — composable pure-JAX model zoo (10 assigned architectures)
   repro.configs   — exact public configs per architecture
   repro.launch    — production mesh, multi-pod dry-run, train/serve drivers
+  repro.sensor    — measured reuse telemetry & cost accounting
+  repro.tune      — trace-driven per-site policy autotuning
 """
 
 __version__ = "0.1.0"

@@ -1,6 +1,6 @@
 from repro.core.delta import DeltaEncoding, delta_encode, delta_encode_int8
 from repro.core.engine import ReuseEngine
-from repro.core.policy import ReusePolicy
+from repro.core.policy import ReusePolicy, SiteTunables
 from repro.core.reuse_cache import (
     ReuseSiteSpec,
     cache_bytes,
@@ -22,6 +22,7 @@ __all__ = [
     "ReusePolicy",
     "ReuseSiteSpec",
     "ReuseStats",
+    "SiteTunables",
     "block_zero_mask",
     "cache_bytes",
     "code_similarity",

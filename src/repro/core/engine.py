@@ -36,6 +36,9 @@ class ReuseEngine:
     modes: dict[str, str] = dataclasses.field(default_factory=dict)
     # per-site leading layer count (0 = unstacked site)
     stacking: dict[str, int] = dataclasses.field(default_factory=dict)
+    # mode-flip cooldown per site: refresh passes left before the next flip
+    # is allowed (each flip costs a recompile; see SiteTunables hysteresis)
+    cooldown: dict[str, int] = dataclasses.field(default_factory=dict)
 
     def register(
         self,
@@ -50,6 +53,10 @@ class ReuseEngine:
         mode: str = "auto",
     ) -> ReuseSiteSpec:
         dataflow = self.policy.decide_dataflow(in_features, out_features)
+        # The policy's per-site table overrides the caller's tile granularity;
+        # the resolved block_k lands in the spec and from there reaches the
+        # Pallas kernel dispatch (reuse_linear → ops.reuse_matmul).
+        block_k = self.policy.resolve_block_k(name, block_k)
         spec = ReuseSiteSpec(
             name=name,
             in_features=in_features,
@@ -64,6 +71,7 @@ class ReuseEngine:
         self.stacking[name] = n_layers
         # Start optimistic (paper's default is reuse-on); policy may demote.
         self.modes[name] = "reuse" if mode == "auto" else mode
+        self.cooldown[name] = 0
         return spec
 
     def init_cache(self, batch: int) -> dict[str, Any]:
@@ -94,36 +102,40 @@ class ReuseEngine:
 
     def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
         """Host-side policy pass: read sim_ema out of the cache, re-decide
-        kernelMode per site. Returns the sites whose mode changed."""
+        kernelMode per site (hysteretically — the policy sees the current
+        mode, and a freshly-flipped site is frozen for its tunables'
+        `hysteresis_steps` passes so modes can't oscillate reuse↔basic across
+        consecutive refreshes). Suppressed flips are counted into the site's
+        sensor counters. Returns the sites whose mode changed."""
         changed = {}
         for name, spec in self.sites.items():
             ema = cache[name]["sim_ema"]
             ema_val = float(jnp.mean(ema))  # stacked sites: mean over layers
-            new_mode = self.policy.decide_mode(spec, ema_val)
-            if new_mode != self.modes[name]:
-                self.modes[name] = new_mode
-                changed[name] = new_mode
+            cur = self.modes[name]
+            new_mode = self.policy.decide_mode(spec, ema_val, current_mode=cur)
+            if new_mode == cur:
+                self.cooldown[name] = max(0, self.cooldown.get(name, 0) - 1)
+                continue
+            if self.cooldown.get(name, 0) > 0:
+                self.cooldown[name] -= 1
+                entry = cache[name]
+                if "sensor" in entry:
+                    sensor = dict(entry["sensor"])
+                    sensor["suppressed_flips"] = sensor["suppressed_flips"] + 1
+                    cache[name] = dict(entry, sensor=sensor)
+                continue
+            self.modes[name] = new_mode
+            changed[name] = new_mode
+            self.cooldown[name] = self.policy.resolve(name).hysteresis_steps
         return changed
 
     def sensor_report(self, cache: dict[str, Any]):
         """Measured reuse accounting for the whole model — the ReuseSensor's
         bypassed-computation / skipped-weight-load counts, reduced host-side
-        from the counters the kernels updated. Supersedes `site_summary`.
+        from the counters the kernels updated.
 
         Returns a repro.sensor.aggregate.SensorReport (per-site, per-layer,
         whole-model, JSONL-emittable)."""
         from repro.sensor.aggregate import build_report
 
         return build_report(self, cache)
-
-    def site_summary(self, cache: dict[str, Any]) -> dict[str, dict[str, float]]:
-        """One EMA scalar per site. Superseded by `sensor_report` (measured
-        counters); kept for cheap logging and back-compat."""
-        out = {}
-        for name in self.sites:
-            out[name] = {
-                "sim_ema": float(jnp.mean(cache[name]["sim_ema"])),
-                "mode": self.modes[name],
-                "steps": int(jnp.max(cache[name]["steps"])),
-            }
-        return out

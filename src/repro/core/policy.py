@@ -11,32 +11,110 @@ Mode decisions are taken *between* jitted steps (host-side, from the sim_ema
 carried in the cache pytree), so a mode flip recompiles rather than bloating
 the step HLO with both branches — the analogue of the paper re-invoking CRS
 with a different parameter block.
+
+The paper's constants are one global operating point, but the measured data
+(its own Fig. 12, our sensor traces) shows the profitable threshold and tile
+granularity differ per layer. `SiteTunables` is the per-site override record:
+the policy resolves a site name to its tunables (falling back to the global
+defaults), and `repro.tune` fits tables of them from recorded sensor traces.
+Because a mode flip costs a recompile, the tunables also carry hysteresis: a
+similarity band (`hysteresis_margin`) the signal must cross before leaving
+the current mode, and a cooldown (`hysteresis_steps`, in refresh passes)
+during which `ReuseEngine.refresh_modes` suppresses flip-backs.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Mapping
 
 from repro.core.reuse_cache import ReuseSiteSpec
+
+DEFAULT_SIM_THRESHOLD = 0.20
+DEFAULT_MIN_WORK_FLOPS = float(2**24)
+DEFAULT_HYSTERESIS_MARGIN = 0.05
+DEFAULT_HYSTERESIS_STEPS = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteTunables:
+    """Per-site policy knobs — the learned replacements for the paper's
+    global constants. `block_k=None` keeps the registration-time default."""
+
+    # Below ~20 % similarity the paper's own data shows little or negative
+    # gain (Fig. 12 layers A-C); tiles need even more headroom.
+    sim_threshold: float = DEFAULT_SIM_THRESHOLD
+    # Small sites aren't worth the bookkeeping (paper: "even if the input
+    # similarity is high for small layers, we see little gains").
+    min_work_flops: float = DEFAULT_MIN_WORK_FLOPS
+    # Delta-tile K granularity reaching the kernel dispatch; None = default.
+    block_k: int | None = None
+    # Mode-flip hysteresis: similarity must leave the current mode's band by
+    # this margin before a flip, and after a flip the site is frozen for
+    # `hysteresis_steps` refresh passes (each flip costs a recompile).
+    hysteresis_margin: float = DEFAULT_HYSTERESIS_MARGIN
+    hysteresis_steps: int = DEFAULT_HYSTERESIS_STEPS
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SiteTunables":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
 
 
 @dataclasses.dataclass(frozen=True)
 class ReusePolicy:
-    # Below ~20 % similarity the paper's own data shows little or negative
-    # gain (Fig. 12 layers A-C); tiles need even more headroom.
-    sim_threshold: float = 0.20
-    # Small sites aren't worth the bookkeeping (paper: "even if the input
-    # similarity is high for small layers, we see little gains").
-    min_work_flops: float = 2**24
+    # Global defaults (the paper's single operating point) ...
+    sim_threshold: float = DEFAULT_SIM_THRESHOLD
+    min_work_flops: float = DEFAULT_MIN_WORK_FLOPS
     dataflow_output_bias: float = 1.0  # >1 prefers output-stationary
+    hysteresis_margin: float = DEFAULT_HYSTERESIS_MARGIN
+    hysteresis_steps: int = DEFAULT_HYSTERESIS_STEPS
+    # ... plus the per-site table that overrides them (fitted by repro.tune).
+    site_tunables: dict[str, SiteTunables] = dataclasses.field(
+        default_factory=dict
+    )
 
-    def decide_mode(self, spec: ReuseSiteSpec, sim_ema: float) -> str:
+    def resolve(self, site: str) -> SiteTunables:
+        """Tunables governing one site: its table entry, else the defaults."""
+        t = self.site_tunables.get(site)
+        if t is not None:
+            return t
+        return SiteTunables(
+            sim_threshold=self.sim_threshold,
+            min_work_flops=self.min_work_flops,
+            hysteresis_margin=self.hysteresis_margin,
+            hysteresis_steps=self.hysteresis_steps,
+        )
+
+    def decide_mode(
+        self,
+        spec: ReuseSiteSpec,
+        sim_ema: float,
+        *,
+        current_mode: str | None = None,
+    ) -> str:
+        """kernelMode for one site. With `current_mode` given, the similarity
+        comparison is hysteretic: the signal must cross the threshold by
+        `hysteresis_margin` before the decision leaves the current mode."""
         if spec.mode in ("reuse", "basic"):
             return spec.mode  # explicit kernelMode wins
+        t = self.resolve(spec.name)
         work = 2.0 * spec.in_features * spec.out_features
-        if work < self.min_work_flops:
+        if work < t.min_work_flops:
             return "basic"
-        return "reuse" if sim_ema >= self.sim_threshold else "basic"
+        threshold = t.sim_threshold
+        if current_mode == "reuse":
+            threshold -= t.hysteresis_margin
+        elif current_mode == "basic":
+            threshold += t.hysteresis_margin
+        return "reuse" if sim_ema >= threshold else "basic"
+
+    def resolve_block_k(self, site: str, default: int) -> int:
+        bk = self.resolve(site).block_k
+        return default if bk is None else int(bk)
 
     def decide_dataflow(self, in_features: int, out_features: int) -> str:
         """Paper Sec. VI-A: 3DUnet's large-input/small-output GEMMs regress

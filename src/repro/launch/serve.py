@@ -43,11 +43,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sensor-jsonl", default=None,
                     help="append the final SensorReport rows to this JSONL file")
+    ap.add_argument("--tuned-policy", default=None,
+                    help="tuned-table JSON (python -m repro.tune.fit output); "
+                    "replaces the global-constant policy with per-site "
+                    "tunables and reports tuned-vs-default mode deltas")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="re-run the host-side mode policy every N decode "
+                    "steps (0 = keep registration-time modes)")
+    ap.add_argument("--affinity", action="store_true",
+                    help="place requests on slots by predicted stream "
+                    "similarity (per-slot sim_ema affinity) instead of "
+                    "first-free")
     args = ap.parse_args()
 
-    if args.sensor_jsonl and not args.reuse:
-        ap.error("--sensor-jsonl requires --reuse (sensor counters ride in "
-                 "the reuse cache)")
+    for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity"):
+        if getattr(args, flag) and not args.reuse:
+            ap.error(f"--{flag.replace('_', '-')} requires --reuse")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -61,10 +72,35 @@ def main() -> None:
     engine = None
     rcache = None
     if args.reuse:
-        engine = build_reuse_engine(cfg, impl="jnp")
+        policy = None
+        if args.tuned_policy:
+            from repro.tune.table import load_tuned_policy
+
+            policy = load_tuned_policy(args.tuned_policy)
+            print(f"tuned policy: {len(policy.site_tunables)} site entries "
+                  f"from {args.tuned_policy}")
+        engine = build_reuse_engine(cfg, impl="jnp", policy=policy)
         rcache = engine.init_cache(args.batch_slots)
         print(f"reuse cache: {cache_bytes(rcache)/1e6:.2f} MB "
               f"({len(engine.sites)} sites)")
+        if args.tuned_policy:
+            # tuned-vs-default delta: probe each site at full similarity
+            # (isolates the min-work admission decision) and report the
+            # per-site knobs that moved off the global constants
+            from repro.core.policy import ReusePolicy
+
+            default = ReusePolicy()
+            for name, spec in engine.sites.items():
+                t = engine.policy.resolve(name)
+                d_mode = default.decide_mode(spec, 1.0)
+                t_mode = engine.policy.decide_mode(spec, 1.0)
+                moved = (d_mode != t_mode
+                         or abs(t.sim_threshold - default.sim_threshold) > 1e-9
+                         or t.block_k is not None)
+                if moved:
+                    print(f"  tuned delta {name}: mode@sim=1 {d_mode}->"
+                          f"{t_mode} thr={t.sim_threshold:.3f} "
+                          f"block_k={spec.block_k}")
 
     # Batched-prefill simplification: slot prefill re-runs the batch prefill
     # with the slot's prompt in its lane (a production server runs a separate
@@ -115,6 +151,7 @@ def main() -> None:
 
         def on_retire(req):
             t = req.telemetry
+            lane_sim[req.slot] = t["hit_rate"]
             print(f"SensorReport rid={req.rid} slot={t['slot']} "
                   f"steps={t['steps']} hit_rate={t['hit_rate']:.3f} "
                   f"sites={t['n_sites']}")
@@ -123,6 +160,28 @@ def main() -> None:
             # end-of-run report before the next admission resets again.
             sstate["rcache"] = reset_slot(sstate["rcache"], req.slot)
 
+    slot_sim_fn = None
+    on_step = None
+    # Lane similarity history for affinity placement. Freed lanes are reset
+    # (their live sim_ema is zero by the time a new request is admitted), so
+    # the lane's "character" is the retirement-telemetry hit rate of the last
+    # stream that lived there — snapshotted before the reset.
+    lane_sim: dict[int, float] = {}
+    if engine is not None and args.affinity:
+        def slot_sim_fn(slot):
+            return lane_sim.get(slot, 0.0)
+
+    if engine is not None and args.refresh_every > 0:
+        def on_step(step_idx):
+            nonlocal decode_jit
+            if step_idx % args.refresh_every == 0:
+                changed = engine.refresh_modes(sstate["rcache"])
+                if changed:
+                    # engine.modes is baked into the traced step — a flip
+                    # means a fresh trace (the paper's CRS re-invocation)
+                    decode_jit = jit_decode_factory()
+                    print(f"policy refresh @step {step_idx}: {changed}")
+
     batcher = ContinuousBatcher(
         batch_slots=args.batch_slots,
         prefill_fn=prefill_fn,
@@ -130,12 +189,17 @@ def main() -> None:
         max_steps=args.requests * args.max_new + 8,
         telemetry_fn=telemetry_fn,
         on_retire=on_retire,
+        slot_sim_fn=slot_sim_fn,
+        on_step=on_step,
     )
     for i in range(args.requests):
         batcher.submit(Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab, size=(args.prompt_len,), dtype=np.int32),
             max_new_tokens=args.max_new,
+            # Stand-in for a session-level similarity predictor: synthetic
+            # traffic alternates sticky-looking and one-shot-looking streams.
+            predicted_sim=(0.8 if i % 2 == 0 else 0.2) if args.affinity else None,
         ))
 
     t0 = time.time()

@@ -16,7 +16,13 @@ package is the reproduction's measured analogue:
                    core↔serve import cycle; not re-exported here).
 """
 
-from repro.sensor.aggregate import SensorReport, SiteSensor, build_report, slot_telemetry
+from repro.sensor.aggregate import (
+    SENSOR_SCHEMA_VERSION,
+    SensorReport,
+    SiteSensor,
+    build_report,
+    slot_telemetry,
+)
 from repro.sensor.counters import (
     init_site_counters,
     update_on_basic,
@@ -36,6 +42,7 @@ __all__ = [
     "E_HBM",
     "E_ICI",
     "E_MAC",
+    "SENSOR_SCHEMA_VERSION",
     "STATIC_W",
     "SensorReport",
     "SiteSensor",

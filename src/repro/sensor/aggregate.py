@@ -22,6 +22,13 @@ from typing import Any
 
 import numpy as np
 
+# Version stamped on every emitted JSONL row; the repro.tune trace loader
+# refuses rows it doesn't understand. Bump when row fields change meaning.
+#   1 — PR 1 emission (implicit; rows carried no version field)
+#   2 — adds schema_version, suppressed_flips, and site geometry
+#       (in_features/out_features/block_m/block_k/block_n) on site/layer rows
+SENSOR_SCHEMA_VERSION = 2
+
 
 @dataclasses.dataclass
 class SiteSensor:
@@ -42,6 +49,14 @@ class SiteSensor:
     mode_transitions: int
     slot_hit_rates: list[float]
     slot_steps: list[int]      # lanes with 0 steps are excluded from hit_rate
+    suppressed_flips: int = 0  # hysteresis-vetoed mode flips (site-level)
+    # Site geometry — what the tune fitter needs to model bookkeeping cost
+    # and pick a block_k without re-deriving the model architecture.
+    in_features: int = 0
+    out_features: int = 0
+    block_m: int = 0
+    block_k: int = 0
+    block_n: int = 0
 
     @property
     def total_tiles(self) -> int:
@@ -109,14 +124,16 @@ class SensorReport:
                 f"  {s.site:24s} mode={s.mode:5s} steps={s.steps:4d} "
                 f"tile_skip={s.tile_skip_rate:6.1%} "
                 f"mac_skip={s.mac_skip_rate:6.1%} "
-                f"hit={s.hit_rate:.3f} transitions={s.mode_transitions}"
+                f"hit={s.hit_rate:.3f} transitions={s.mode_transitions} "
+                f"suppressed={s.suppressed_flips}"
             )
         return lines
 
     def to_dicts(self) -> list[dict[str, Any]]:
-        rows = [dict(self.model, kind="model")]
-        rows += [dict(s.to_dict(), kind="site") for s in self.per_site]
-        rows += [dict(s.to_dict(), kind="layer") for s in self.per_layer]
+        ver = {"schema_version": SENSOR_SCHEMA_VERSION}
+        rows = [dict(self.model, kind="model", **ver)]
+        rows += [dict(s.to_dict(), kind="site", **ver) for s in self.per_site]
+        rows += [dict(s.to_dict(), kind="layer", **ver) for s in self.per_layer]
         return rows
 
     def write_jsonl(self, path: str, *, mode: str = "a") -> None:
@@ -125,7 +142,7 @@ class SensorReport:
                 f.write(json.dumps(row) + "\n")
 
 
-def _entry_rows(name: str, mode: str, entry: dict) -> list[SiteSensor]:
+def _entry_rows(name: str, mode: str, entry: dict, spec=None) -> list[SiteSensor]:
     """One SiteSensor per leading-layer slice of a cache entry's counters."""
     sensor = entry["sensor"]
     skipped = np.asarray(sensor["skipped_tiles"])
@@ -157,6 +174,13 @@ def _entry_rows(name: str, mode: str, entry: dict) -> list[SiteSensor]:
             mode_transitions=int(leaf("mode_transitions", layer)),
             slot_hit_rates=list(hit_sum / np.maximum(slot_steps, 1)),
             slot_steps=[int(s) for s in slot_steps],
+            suppressed_flips=int(leaf("suppressed_flips", layer))
+            if "suppressed_flips" in sensor else 0,
+            in_features=spec.in_features if spec else 0,
+            out_features=spec.out_features if spec else 0,
+            block_m=spec.block_m if spec else 0,
+            block_k=spec.block_k if spec else 0,
+            block_n=spec.block_n if spec else 0,
         ))
     return rows
 
@@ -180,6 +204,14 @@ def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
         mode_transitions=sum(r.mode_transitions for r in rows),
         slot_hit_rates=list(np.asarray(hit, np.float64)),
         slot_steps=[int(s) for s in lane_steps],
+        # suppression is a site-level event bumped on every layer slice at
+        # once, so max (not sum) recovers the event count
+        suppressed_flips=max(r.suppressed_flips for r in rows),
+        in_features=rows[0].in_features,
+        out_features=rows[0].out_features,
+        block_m=rows[0].block_m,
+        block_k=rows[0].block_k,
+        block_n=rows[0].block_n,
     )
 
 
@@ -191,7 +223,8 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         entry = cache[name]
         if "sensor" not in entry:
             continue
-        rows = _entry_rows(name, engine.modes[name], entry)
+        rows = _entry_rows(name, engine.modes[name], entry,
+                           spec=engine.sites[name])
         if rows[0].layer is not None:
             per_layer += rows
         per_site.append(_sum_rows(name, engine.modes[name], rows))
@@ -200,7 +233,7 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         k: sum(getattr(s, k) for s in per_site)
         for k in ("skipped_tiles", "computed_tiles", "skipped_macs",
                   "computed_macs", "skipped_weight_bytes", "total_weight_bytes",
-                  "reused_out_elems", "mode_transitions")
+                  "reused_out_elems", "mode_transitions", "suppressed_flips")
     }
     total_tiles = tot["skipped_tiles"] + tot["computed_tiles"]
     total_macs = tot["skipped_macs"] + tot["computed_macs"]

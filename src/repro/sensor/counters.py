@@ -47,6 +47,10 @@ def init_site_counters(batch: int) -> dict[str, jax.Array]:
         # kernelMode tracking: -1 = never evaluated, 0 = basic, 1 = reuse.
         "mode_flag": jnp.full((), -1, jnp.int32),
         "mode_transitions": jnp.zeros((), jnp.int32),
+        # flips the policy WANTED but hysteresis vetoed (incremented host-side
+        # by ReuseEngine.refresh_modes; a site-level event, so stacked sites
+        # see every layer slice bumped together and aggregation takes the max)
+        "suppressed_flips": jnp.zeros((), jnp.int32),
         # per-slot hit-rate accumulators (reset per lane on slot recycle)
         "slot_hit_sum": jnp.zeros((batch,), jnp.float32),
         "slot_steps": jnp.zeros((batch,), jnp.int32),

@@ -70,6 +70,7 @@ def run_measured_decode(
     seed: int = 0,
     reduced: bool = True,
     refresh_policy: bool = False,
+    policy=None,
 ) -> MeasuredDecode:
     """Decode `steps` tokens on a (reduced) arch and harvest sensor counters.
 
@@ -78,13 +79,16 @@ def run_measured_decode(
     measures real policy churn); False pins the registration-time modes, which
     keeps every site on the reuse path — the right setting when the point is
     to measure skip rates.
+
+    `policy` (a ReusePolicy, e.g. from repro.tune.load_tuned_policy) replaces
+    the default global-constant policy — the tuned-vs-default benchmark knob.
     """
     cfg = ARCHS[arch]
     if reduced:
         cfg = cfg.reduced()
     rng = np.random.default_rng(seed)
     params = init_params(cfg, jax.random.PRNGKey(seed))
-    engine = build_reuse_engine(cfg, impl="jnp")
+    engine = build_reuse_engine(cfg, impl="jnp", policy=policy)
     rcache = engine.init_cache(batch)
     state = init_serve_state(cfg, batch, cache_len)
 

@@ -29,6 +29,11 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
     eos_id: int = -1              # -1: run to max_new_tokens
+    # Predicted stream similarity in [0, 1] (session-level prior: a sticky
+    # agent loop predicts high, a one-shot query low). When set — and the
+    # batcher has a slot_sim_fn — admission places the request on the free
+    # slot whose sim_ema history best matches, instead of first-free.
+    predicted_sim: float | None = None
     # filled by the scheduler
     output: list = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -73,6 +78,8 @@ class ContinuousBatcher:
         max_steps: int = 512,
         telemetry_fn: Callable | None = None,  # (slot) -> dict, at retirement
         on_retire: Callable | None = None,     # (Request) -> None
+        slot_sim_fn: Callable | None = None,   # (slot) -> lane sim_ema score
+        on_step: Callable | None = None,       # (step_idx) -> None, post-decode
     ):
         self.batch_slots = batch_slots
         self.prefill_fn = prefill_fn
@@ -80,19 +87,44 @@ class ContinuousBatcher:
         self.max_steps = max_steps
         self.telemetry_fn = telemetry_fn
         self.on_retire = on_retire
+        self.slot_sim_fn = slot_sim_fn
+        self.on_step = on_step
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.free_slots = list(range(batch_slots))
         self.completed: list[Request] = []
-        self.stats = {"steps": 0, "prefills": 0, "emitted_tokens": 0}
+        self.stats = {"steps": 0, "prefills": 0, "emitted_tokens": 0,
+                      "affinity_placements": 0}
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _pick_slot(self, req: Request) -> int:
+        """Slot for an incoming request. Default: first-free. With a
+        slot_sim_fn and a request-side similarity prediction, pick the free
+        slot whose lane sim_ema history is closest to the prediction: lane
+        data is reset on admission, but the mode policy and per-site tunables
+        key off per-slot sim_ema, so keeping similarity-alike streams on the
+        same lanes stabilises the mean the policy reads and avoids mode-flip
+        (recompile) churn when traffic mixes sticky and one-shot streams."""
+        if (
+            req.predicted_sim is None
+            or self.slot_sim_fn is None
+            or len(self.free_slots) == 1
+        ):
+            return self.free_slots.pop()
+        slot = min(
+            self.free_slots,
+            key=lambda s: abs(float(self.slot_sim_fn(s)) - req.predicted_sim),
+        )
+        self.free_slots.remove(slot)
+        self.stats["affinity_placements"] += 1
+        return slot
+
     def _admit(self) -> None:
         while self.queue and self.free_slots:
-            slot = self.free_slots.pop()
             req = self.queue.popleft()
+            slot = self._pick_slot(req)
             req.slot = slot
             first = self.prefill_fn(req.prompt[None, :], slot)
             req.output.append(int(first))
@@ -121,6 +153,8 @@ class ContinuousBatcher:
                 cur[slot, 0] = req.output[-1]
             nxt = np.asarray(self.decode_fn(cur))
             self.stats["steps"] += 1
+            if self.on_step is not None:
+                self.on_step(self.stats["steps"])
             for slot in list(self.active):
                 req = self.active[slot]
                 tok = int(nxt[slot, 0])

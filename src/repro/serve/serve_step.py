@@ -18,19 +18,29 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import ReuseEngine
+from repro.core.policy import ReusePolicy
 from repro.models import forward, init_decode_state, output_logits
 
 
 def build_reuse_engine(
-    cfg: ModelConfig, *, impl: str = "jnp", block_m: int = 8, block_k: int = 256
+    cfg: ModelConfig,
+    *,
+    impl: str = "jnp",
+    block_m: int = 8,
+    block_k: int = 256,
+    policy: ReusePolicy | None = None,
 ) -> ReuseEngine:
     """Register the decode-time reuse sites for an architecture.
 
     Site inventory mirrors DESIGN.md §4: attention projections + dense MLP +
     shared-expert everywhere they exist; routed experts and nested-inner sites
     are excluded (documented arch-applicability scoping).
+
+    `policy` carries per-site tunables (see repro.tune): registration resolves
+    each site's block_k through it, so a tuned table changes the tile
+    granularity the kernels are dispatched with.
     """
-    eng = ReuseEngine(impl=impl)
+    eng = ReuseEngine(impl=impl, policy=policy or ReusePolicy())
     nsb = cfg.n_superblocks
     d = cfg.d_model
 

@@ -1,0 +1,41 @@
+"""repro.tune — trace-driven autotuning of the reuse policy.
+
+Closes the loop the sensor subsystem opened: serving runs record measured
+per-site harvest (`--sensor-jsonl`), the fitter turns those traces into
+per-site :class:`~repro.core.policy.SiteTunables` (threshold / block_k /
+min-work / hysteresis, solved against `repro.sensor.cost_model`), and the
+serialized table feeds back into serving via ``--tuned-policy``:
+
+    serve --reuse --sensor-jsonl trace.jsonl      # record
+    python -m repro.tune.fit --trace trace.jsonl --out tuned.json
+    serve --reuse --tuned-policy tuned.json       # exploit
+
+* ``trace`` — schema-validated loader for sensor JSONL output;
+* ``fit``   — the harvest-model fitter (also ``python -m repro.tune.fit``);
+* ``table`` — tuned-table JSON serialization + policy construction.
+"""
+
+from repro.tune.fit import FitConfig, fit_site, fit_trace
+from repro.tune.table import (
+    TUNED_TABLE_SCHEMA_VERSION,
+    TableSchemaError,
+    load_table,
+    load_tuned_policy,
+    save_table,
+)
+from repro.tune.trace import SiteTraceRecord, Trace, TraceSchemaError, load_trace
+
+__all__ = [
+    "FitConfig",
+    "SiteTraceRecord",
+    "TUNED_TABLE_SCHEMA_VERSION",
+    "TableSchemaError",
+    "Trace",
+    "TraceSchemaError",
+    "fit_site",
+    "fit_trace",
+    "load_table",
+    "load_trace",
+    "load_tuned_policy",
+    "save_table",
+]

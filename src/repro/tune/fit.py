@@ -1,0 +1,208 @@
+"""Harvest-model fitter: measured sensor trace → per-site SiteTunables.
+
+The paper runs every layer at one global operating point; its own Fig. 12
+shows that leaves gains on the table (and regresses small / low-similarity
+layers). This fitter closes the loop PR 1 opened: it reads the measured
+per-site skip rates out of a sensor trace and solves, per site, for the knobs
+`ReusePolicy` consults — using the same `repro.sensor.cost_model` constants
+the measured benchmarks report with, so "profitable" here means profitable in
+the units the benchmarks measure.
+
+Per-step harvest model for one site (batch M, weights [K, N]):
+
+    saved(r)  = g · r · (W_bytes · E_HBM  +  MACs · 2 · E_MAC)
+    book      = (M·K·(x + prev_q + cur_q + delta)  +  M·N·(read + write O_p))
+                · E_HBM
+
+where r is the stream's code-hit rate, and g is the site's measured *harvest
+efficiency* — the fraction of similarity the current tile granularity turns
+into actually-skipped weight traffic (weight_byte_skip_rate / hit_rate).
+The break-even hit rate r* solves saved(r*) = book; the fitted sim_threshold
+is r* padded by a safety margin. Sites whose measured operating point is
+net-positive get min_work_flops lowered to admit them; net-negative sites get
+it raised to pin them basic. block_k steps down when g shows the granularity
+is wasting similarity (tiles too coarse) and up when the harvest is already
+saturated; churny sites (high mode_transitions/steps) get stiffer hysteresis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.policy import (
+    DEFAULT_MIN_WORK_FLOPS,
+    SiteTunables,
+)
+from repro.sensor.cost_model import E_HBM, E_MAC, FLOPS_PER_MAC
+from repro.tune.trace import SiteTraceRecord, Trace
+
+# Bookkeeping bytes per element, charged at HBM rates (conservative — much of
+# this traffic stays on-chip): read x f32 + prev_q int8, write cur_q int8 +
+# delta f32 per [M, K] element; read + write the f32 [M, N] prev_out panel.
+BOOKKEEP_BYTES_PER_XK = 4.0 + 1.0 + 1.0 + 4.0
+BOOKKEEP_BYTES_PER_MN = 4.0 + 4.0
+
+BLOCK_K_CHOICES = (64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    safety_margin: float = 1.25     # threshold = margin × break-even hit rate
+    min_threshold: float = 0.05
+    max_threshold: float = 0.95
+    # harvest-efficiency prior for sites with no measured reuse steps
+    # (granularity.py measures 0.7-0.9 at block_k=256; stay conservative)
+    prior_efficiency: float = 0.7
+    low_efficiency: float = 0.5     # below: halve block_k (tiles too coarse)
+    high_efficiency: float = 0.9    # above: double block_k (harvest saturated)
+    churn_flip_rate: float = 0.10   # transitions/step above this = churny
+    min_work_admit_factor: float = 0.5
+    min_work_reject_factor: float = 2.0
+
+
+def _per_step_costs(rec: SiteTraceRecord) -> tuple[float, float, float]:
+    """(dense weight bytes, dense MACs, bookkeeping joules) per evaluation."""
+    steps = max(rec.steps, 1)
+    gm = -(-rec.batch // rec.block_m)
+    gk = -(-rec.in_features // rec.block_k)
+    if rec.total_weight_bytes > 0:
+        w_bytes = rec.total_weight_bytes / steps
+    else:  # trace without byte totals: assume f32 weights on the padded grid
+        w_bytes = gm * gk * rec.block_k * rec.out_features * 4.0
+    if rec.total_macs > 0:
+        macs = rec.total_macs / steps
+    else:
+        macs = gm * gk * rec.block_m * rec.block_k * rec.out_features
+    book_j = (
+        rec.batch * rec.in_features * BOOKKEEP_BYTES_PER_XK
+        + rec.batch * rec.out_features * BOOKKEEP_BYTES_PER_MN
+    ) * E_HBM
+    return w_bytes, macs, book_j
+
+
+def _saved_per_step_j(w_bytes: float, macs: float, g: float, r: float) -> float:
+    return g * r * (w_bytes * E_HBM + macs * FLOPS_PER_MAC * E_MAC)
+
+
+def _pick_block_k(rec: SiteTraceRecord, g: float, cfg: FitConfig) -> int:
+    # Cap at the largest choice that doesn't exceed the (padded) K extent —
+    # a block_k beyond K degenerates to all-or-nothing skipping.
+    viable = [c for c in BLOCK_K_CHOICES if c <= rec.in_features]
+    if not viable:
+        return BLOCK_K_CHOICES[0]
+    cur = min(viable, key=lambda c: abs(c - rec.block_k))
+    idx = viable.index(cur)
+    if g < cfg.low_efficiency and idx > 0:
+        return viable[idx - 1]
+    if g > cfg.high_efficiency and idx < len(viable) - 1:
+        return viable[idx + 1]
+    return cur
+
+
+def fit_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables:
+    """Solve one site's tunables from its measured operating point."""
+    w_bytes, macs, book_j = _per_step_costs(rec)
+    measured_reuse = rec.tile_skip_rate > 0.0 or (
+        rec.mode == "reuse" and rec.steps > 0
+    )
+    g = rec.harvest_efficiency if measured_reuse else 0.0
+    if g <= 0.0:
+        g = cfg.prior_efficiency
+
+    saveable_j = _saved_per_step_j(w_bytes, macs, g, 1.0)
+    if saveable_j <= 0.0:
+        break_even = 1.0  # nothing to harvest; threshold clamps to max
+    else:
+        break_even = book_j / saveable_j
+    sim_threshold = min(
+        max(cfg.safety_margin * break_even, cfg.min_threshold),
+        cfg.max_threshold,
+    )
+
+    # min_work: admit the site if its MEASURED operating point is net-positive
+    # (harvest at the observed hit rate beats the bookkeeping), else pin it
+    # basic — the per-site replacement for the one global small-layer cutoff.
+    net_j = _saved_per_step_j(w_bytes, macs, g, rec.hit_rate) - book_j
+    if net_j > 0.0:
+        min_work = min(DEFAULT_MIN_WORK_FLOPS,
+                       cfg.min_work_admit_factor * rec.work_flops)
+    else:
+        min_work = max(DEFAULT_MIN_WORK_FLOPS,
+                       cfg.min_work_reject_factor * rec.work_flops)
+
+    flip_rate = rec.mode_transitions / max(rec.steps, 1)
+    churny = flip_rate > cfg.churn_flip_rate or rec.suppressed_flips > 0
+    base = SiteTunables()
+    return SiteTunables(
+        sim_threshold=sim_threshold,
+        min_work_flops=min_work,
+        block_k=_pick_block_k(rec, g, cfg),
+        hysteresis_margin=base.hysteresis_margin * (2.0 if churny else 1.0),
+        hysteresis_steps=base.hysteresis_steps * (2 if churny else 1),
+    )
+
+
+def fit_trace(
+    trace: Trace, cfg: FitConfig = FitConfig()
+) -> dict[str, SiteTunables]:
+    return {name: fit_site(rec, cfg) for name, rec in sorted(trace.sites.items())}
+
+
+def summary_lines(
+    trace: Trace, tunables: dict[str, SiteTunables]
+) -> list[str]:
+    default = SiteTunables()
+    lines = [
+        f"fitted {len(tunables)} sites from {trace.n_rows} rows "
+        f"({trace.path})",
+        f"{'site':24s} {'thr':>6s} {'blk_k':>6s} {'min_work':>10s} "
+        f"{'hit':>5s} {'eff':>5s}  vs default",
+    ]
+    for name, t in tunables.items():
+        rec = trace.sites[name]
+        diffs = []
+        if abs(t.sim_threshold - default.sim_threshold) > 1e-9:
+            diffs.append(f"thr {default.sim_threshold:.2f}->{t.sim_threshold:.2f}")
+        if t.block_k != rec.block_k:
+            diffs.append(f"block_k {rec.block_k}->{t.block_k}")
+        if t.min_work_flops != default.min_work_flops:
+            diffs.append(f"min_work {default.min_work_flops:.2e}->"
+                         f"{t.min_work_flops:.2e}")
+        lines.append(
+            f"{name:24s} {t.sim_threshold:6.3f} {t.block_k!s:>6s} "
+            f"{t.min_work_flops:10.3e} {rec.hit_rate:5.2f} "
+            f"{rec.harvest_efficiency:5.2f}  {'; '.join(diffs) or 'unchanged'}"
+        )
+    return lines
+
+
+def main() -> None:
+    import argparse
+
+    from repro.tune.table import save_table
+    from repro.tune.trace import load_trace
+
+    ap = argparse.ArgumentParser(
+        description="Fit per-site ReusePolicy tunables from a sensor trace "
+        "(serve with --sensor-jsonl, fit, serve with --tuned-policy)."
+    )
+    ap.add_argument("--trace", required=True, help="sensor JSONL trace path")
+    ap.add_argument("--out", required=True, help="tuned-table JSON output path")
+    ap.add_argument("--safety-margin", type=float,
+                    default=FitConfig.safety_margin)
+    ap.add_argument("--prior-efficiency", type=float,
+                    default=FitConfig.prior_efficiency)
+    args = ap.parse_args()
+
+    cfg = FitConfig(safety_margin=args.safety_margin,
+                    prior_efficiency=args.prior_efficiency)
+    trace = load_trace(args.trace)
+    tunables = fit_trace(trace, cfg)
+    print("\n".join(summary_lines(trace, tunables)))
+    save_table(args.out, tunables,
+               meta={"trace": args.trace, "n_rows": trace.n_rows})
+    print(f"tuned table written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

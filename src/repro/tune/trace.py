@@ -1,0 +1,158 @@
+"""Sensor-trace loader — parses `--sensor-jsonl` output for the fitter.
+
+A sensor trace is the JSONL file the serving driver / measured benchmarks
+append :class:`~repro.sensor.aggregate.SensorReport` rows to. Counters are
+cumulative, and a long-running server appends a report per emission, so for
+each site the LAST row wins — it covers the whole measured window.
+
+The loader is strict about provenance: every row must carry the
+``schema_version`` this tree emits (`SENSOR_SCHEMA_VERSION`). Traces recorded
+by older builds (no version field, or no site geometry) are refused with a
+:class:`TraceSchemaError` rather than silently mis-fitted — the fitter's
+bookkeeping model needs the geometry fields that only versioned rows carry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.sensor.aggregate import SENSOR_SCHEMA_VERSION
+
+
+class TraceSchemaError(ValueError):
+    """Raised when a trace row is missing/mismatched on schema_version or
+    lacks the fields the fitter needs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteTraceRecord:
+    """One site's measured operating point over the trace window."""
+
+    site: str
+    mode: str
+    steps: int
+    batch: int                 # serving lanes (len of slot_steps)
+    in_features: int
+    out_features: int
+    block_m: int
+    block_k: int
+    block_n: int
+    tile_skip_rate: float
+    mac_skip_rate: float
+    weight_byte_skip_rate: float
+    hit_rate: float
+    mode_transitions: int
+    suppressed_flips: int
+    total_weight_bytes: float
+    total_macs: float
+
+    @property
+    def work_flops(self) -> float:
+        """Dense per-row work of the site (the policy's min_work metric)."""
+        return 2.0 * self.in_features * self.out_features
+
+    @property
+    def harvest_efficiency(self) -> float:
+        """Measured skip-per-similarity ratio: how much of the stream's code
+        similarity the current block_k actually converts into skipped weight
+        traffic. 1.0 = every similar code lands in a fully-skipped tile."""
+        if self.hit_rate <= 0.0:
+            return 0.0
+        return min(self.weight_byte_skip_rate / self.hit_rate, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Parsed trace: last snapshot per site + the last model-level row."""
+
+    sites: dict[str, SiteTraceRecord]
+    model: dict[str, Any] | None
+    n_rows: int
+    path: str
+
+
+_REQUIRED_SITE_FIELDS = (
+    "site", "mode", "steps", "in_features", "out_features",
+    "block_m", "block_k", "block_n", "tile_skip_rate", "mac_skip_rate",
+    "weight_byte_skip_rate", "hit_rate", "slot_steps",
+)
+
+
+def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:
+    ver = row.get("schema_version")
+    if ver is None:
+        raise TraceSchemaError(
+            f"{path}:{lineno}: row has no schema_version — trace predates the "
+            f"versioned emission; re-record with --sensor-jsonl on this build"
+        )
+    if ver != SENSOR_SCHEMA_VERSION:
+        raise TraceSchemaError(
+            f"{path}:{lineno}: schema_version {ver} != supported "
+            f"{SENSOR_SCHEMA_VERSION}"
+        )
+
+
+def _site_record(row: dict[str, Any], lineno: int, path: str) -> SiteTraceRecord:
+    missing = [f for f in _REQUIRED_SITE_FIELDS if f not in row]
+    if missing:
+        raise TraceSchemaError(f"{path}:{lineno}: site row missing {missing}")
+    # The fitter divides by every one of these; zero means the row was
+    # recorded without real site specs.
+    zeroed = [f for f in ("in_features", "out_features", "block_m", "block_k")
+              if not row[f]]
+    if zeroed or not row["slot_steps"]:
+        raise TraceSchemaError(
+            f"{path}:{lineno}: site row carries no geometry "
+            f"({zeroed or ['slot_steps']} empty) — recorded by an engine "
+            f"without specs?"
+        )
+    return SiteTraceRecord(
+        site=row["site"],
+        mode=row["mode"],
+        steps=int(row["steps"]),
+        batch=len(row["slot_steps"]),
+        in_features=int(row["in_features"]),
+        out_features=int(row["out_features"]),
+        block_m=int(row["block_m"]),
+        block_k=int(row["block_k"]),
+        block_n=int(row["block_n"]),
+        tile_skip_rate=float(row["tile_skip_rate"]),
+        mac_skip_rate=float(row["mac_skip_rate"]),
+        weight_byte_skip_rate=float(row["weight_byte_skip_rate"]),
+        hit_rate=float(row["hit_rate"]),
+        mode_transitions=int(row.get("mode_transitions", 0)),
+        suppressed_flips=int(row.get("suppressed_flips", 0)),
+        total_weight_bytes=float(row.get("total_weight_bytes", 0.0)),
+        total_macs=float(row.get("total_macs", 0.0)),
+    )
+
+
+def load_trace(path: str) -> Trace:
+    """Parse a sensor JSONL trace; last row per site wins (cumulative
+    counters). Raises TraceSchemaError on version/field mismatch."""
+    sites: dict[str, SiteTraceRecord] = {}
+    model: dict[str, Any] | None = None
+    n_rows = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise TraceSchemaError(f"{path}:{lineno}: not JSON ({e})") from e
+            _check_version(row, lineno, path)
+            n_rows += 1
+            kind = row.get("kind")
+            if kind == "site":
+                rec = _site_record(row, lineno, path)
+                sites[rec.site] = rec
+            elif kind == "model":
+                model = row
+            # "layer" rows are site-slices; the fitter works at site level.
+    if not sites:
+        raise TraceSchemaError(f"{path}: no site rows found")
+    return Trace(sites=sites, model=model, n_rows=n_rows, path=path)

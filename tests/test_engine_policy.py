@@ -1,11 +1,11 @@
-"""ReuseEngine / ReusePolicy behaviour: mode decisions, EMA, stats, scheduler
-slot recycling."""
+"""ReuseEngine / ReusePolicy behaviour: mode decisions, per-site tunables,
+hysteresis, EMA, stats, scheduler slot recycling + affinity placement."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ReuseEngine, ReusePolicy, ReuseSiteSpec
+from repro.core import ReuseEngine, ReusePolicy, ReuseSiteSpec, SiteTunables
 from repro.serve.scheduler import ContinuousBatcher, Request, reset_slot
 
 
@@ -34,6 +34,56 @@ def test_policy_dataflow_choice():
     assert pol.decide_dataflow(4096, 4096) == "output"
 
 
+def test_policy_dataflow_aspect_ratio_boundary():
+    """The input-stationary switch is strict: exactly 4x (times the bias)
+    stays output-stationary; one past it flips to input-stationary."""
+    pol = ReusePolicy()  # dataflow_output_bias = 1.0
+    assert pol.decide_dataflow(4 * 256, 256) == "output"
+    assert pol.decide_dataflow(4 * 256 + 1, 256) == "input"
+    # the bias scales the boundary
+    biased = ReusePolicy(dataflow_output_bias=2.0)
+    assert biased.decide_dataflow(8 * 256, 256) == "output"
+    assert biased.decide_dataflow(8 * 256 + 1, 256) == "input"
+
+
+def test_policy_per_site_tunables_override_globals():
+    pol = ReusePolicy(
+        sim_threshold=0.5, min_work_flops=1000,
+        site_tunables={"special": SiteTunables(sim_threshold=0.1,
+                                               min_work_flops=10.0,
+                                               block_k=64)},
+    )
+    plain = ReuseSiteSpec("plain", 64, 64, mode="auto")     # work 8192
+    special = ReuseSiteSpec("special", 64, 64, mode="auto")
+    # plain follows the globals: work 8192 >= 1000, threshold 0.5
+    assert pol.decide_mode(plain, sim_ema=0.3) == "basic"
+    # special's tuned threshold (0.1) admits the same similarity
+    assert pol.decide_mode(special, sim_ema=0.3) == "reuse"
+    assert pol.resolve_block_k("special", 256) == 64
+    assert pol.resolve_block_k("plain", 256) == 256
+
+
+def test_tuned_block_k_reaches_site_spec_and_kernel_dispatch(rng):
+    """A tuned block_k must land in the registered spec (which is what
+    reuse_linear hands the kernels) and still produce the exact output."""
+    pol = ReusePolicy(site_tunables={"site": SiteTunables(block_k=64)})
+    eng = ReuseEngine(policy=pol)
+    eng.register("site", 256, 128)          # caller default block_k=256
+    assert eng.sites["site"].block_k == 64  # tunable wins
+    cache = eng.init_cache(batch=4)
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    out, entry, _ = eng.apply("site", x, w, None, cache["site"])
+    # vs a default-geometry engine: same math, different tiling
+    eng2 = ReuseEngine()
+    eng2.register("site", 256, 128)
+    out2, _, _ = eng2.apply("site", x, w, None, eng2.init_cache(4)["site"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+    # finer tiles -> more tiles on the grid: 4 K-blocks instead of 1
+    assert int(entry["sensor"]["computed_tiles"]) == 4
+
+
 def test_refresh_modes_roundtrip(rng):
     eng = ReuseEngine(policy=ReusePolicy(sim_threshold=0.5,
                                          min_work_flops=1000))
@@ -43,9 +93,38 @@ def test_refresh_modes_roundtrip(rng):
     cache["site"]["sim_ema"] = jnp.float32(0.1)
     changed = eng.refresh_modes(cache)
     assert changed == {"site": "basic"}
+    # immediately wanting back up is vetoed by the flip cooldown ...
     cache["site"]["sim_ema"] = jnp.float32(0.9)
+    assert eng.refresh_modes(cache) == {}
+    assert int(jnp.max(cache["site"]["sensor"]["suppressed_flips"])) == 1
+    # ... and allowed once the cooldown has drained
     changed = eng.refresh_modes(cache)
     assert changed == {"site": "reuse"}
+
+
+def test_refresh_modes_hysteresis_band_blocks_marginal_flips():
+    """Similarity hovering just inside the hysteresis band must not flip the
+    mode at all (no recompile churn) — the decision is sticky around the
+    threshold by +/- hysteresis_margin."""
+    eng = ReuseEngine(policy=ReusePolicy(sim_threshold=0.5,
+                                         min_work_flops=1000,
+                                         hysteresis_margin=0.1))
+    eng.register("site", 512, 512)
+    cache = eng.init_cache(batch=4)
+    assert eng.modes["site"] == "reuse"
+    # below threshold but inside the band: stays in reuse, not even suppressed
+    cache["site"]["sim_ema"] = jnp.float32(0.45)
+    assert eng.refresh_modes(cache) == {}
+    assert eng.modes["site"] == "reuse"
+    assert int(jnp.max(cache["site"]["sensor"]["suppressed_flips"])) == 0
+    # clearly below the band: demotes
+    cache["site"]["sim_ema"] = jnp.float32(0.3)
+    assert eng.refresh_modes(cache) == {"site": "basic"}
+    # just above threshold but inside the band: stays basic
+    cache["site"]["sim_ema"] = jnp.float32(0.55)
+    eng.cooldown["site"] = 0  # isolate the band from the cooldown
+    assert eng.refresh_modes(cache) == {}
+    assert eng.modes["site"] == "basic"
 
 
 def test_stacked_cache_shapes():
@@ -77,6 +156,50 @@ def test_scheduler_completes_all_requests(rng):
         # deterministic fake model: strictly incrementing tokens
         for a, c in zip(req.output, req.output[1:]):
             assert c == (a + 1) % 100
+
+
+def test_scheduler_affinity_places_by_predicted_similarity():
+    """With a slot_sim_fn, admission matches requests to the free slot whose
+    lane similarity history is closest to the request's prediction."""
+    lane_sim = {0: 0.9, 1: 0.1, 2: 0.5}
+
+    def prefill_fn(prompt, slot):
+        return 1
+
+    def decode_fn(tokens):
+        return tokens + 1
+
+    b = ContinuousBatcher(
+        batch_slots=3, prefill_fn=prefill_fn, decode_fn=decode_fn,
+        max_steps=50, slot_sim_fn=lambda s: lane_sim[s],
+    )
+    b.submit(Request(rid=0, prompt=np.asarray([1], np.int32),
+                     max_new_tokens=2, predicted_sim=0.15))
+    b.submit(Request(rid=1, prompt=np.asarray([2], np.int32),
+                     max_new_tokens=2, predicted_sim=0.85))
+    b.submit(Request(rid=2, prompt=np.asarray([3], np.int32),
+                     max_new_tokens=2))                   # no prediction
+    done = {r.rid: r for r in b.run()}
+    assert done[0].slot == 1     # low-sim stream -> low-sim lane
+    assert done[1].slot == 0     # sticky stream -> high-sim lane
+    assert done[2].slot == 2     # unpredicted -> the remaining (first-free) slot
+    assert b.stats["affinity_placements"] == 2
+
+
+def test_scheduler_affinity_falls_back_to_first_free():
+    """No slot_sim_fn (or no prediction) keeps the original first-free order."""
+    def prefill_fn(prompt, slot):
+        return 1
+
+    b = ContinuousBatcher(batch_slots=2, prefill_fn=prefill_fn,
+                          decode_fn=lambda t: t + 1, max_steps=20)
+    b.submit(Request(rid=0, prompt=np.asarray([1], np.int32),
+                     max_new_tokens=2, predicted_sim=0.9))
+    b.submit(Request(rid=1, prompt=np.asarray([2], np.int32),
+                     max_new_tokens=2))
+    done = {r.rid: r for r in b.run()}
+    assert {done[0].slot, done[1].slot} == {0, 1}
+    assert b.stats["affinity_placements"] == 0
 
 
 def test_reset_slot_zeroes_one_lane():

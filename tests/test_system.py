@@ -110,9 +110,9 @@ def test_reuse_sites_accumulate_similarity_stats(rng):
             params, cfg, tok, state, engine=engine, reuse_cache=rcache
         )
         tok = greedy_sample(logits)
-    summary = engine.site_summary(rcache)
-    assert all(s["steps"] == 6 for s in summary.values())
-    assert any(s["sim_ema"] > 0 for s in summary.values())
+    report = engine.sensor_report(rcache)
+    assert all(s.steps == 6 for s in report.per_site)
+    assert any(s.hit_rate > 0 for s in report.per_site)
 
 
 def test_full_serving_stack_with_scheduler(rng):

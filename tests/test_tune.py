@@ -1,0 +1,201 @@
+"""repro.tune — trace loading, fitting, serialization, and the closed loop.
+
+The load-bearing acceptance property lives in
+`test_end_to_end_tuned_policy_beats_default`: tunables fitted from a recorded
+sensor trace survive a save/load round trip, make at least one per-site
+decision the global-constant policy would not, and — on a synthetic
+high-similarity stream with the host-side mode refresh live — harvest at
+least as much skipped-MAC fraction as the default policy does.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReusePolicy, SiteTunables
+from repro.sensor.aggregate import SENSOR_SCHEMA_VERSION
+from repro.tune import (
+    FitConfig,
+    TableSchemaError,
+    TraceSchemaError,
+    fit_trace,
+    load_table,
+    load_trace,
+    load_tuned_policy,
+    save_table,
+)
+
+SAMPLE_TRACE = "tests/data/sample_trace.jsonl"
+
+
+# ---------------------------------------------------------------- trace layer
+
+def test_load_sample_trace():
+    trace = load_trace(SAMPLE_TRACE)
+    assert len(trace.sites) >= 2
+    assert trace.model is not None and trace.model["kind"] == "model"
+    for rec in trace.sites.values():
+        assert rec.steps > 0 and rec.batch > 0
+        assert rec.in_features > 0 and rec.block_k > 0
+        assert 0.0 <= rec.tile_skip_rate <= 1.0
+        assert 0.0 <= rec.harvest_efficiency <= 1.0
+
+
+def test_trace_loader_rejects_missing_schema_version(tmp_path):
+    p = tmp_path / "old.jsonl"
+    p.write_text(json.dumps({"kind": "site", "site": "s"}) + "\n")
+    with pytest.raises(TraceSchemaError, match="schema_version"):
+        load_trace(str(p))
+
+
+def test_trace_loader_rejects_wrong_schema_version(tmp_path):
+    p = tmp_path / "future.jsonl"
+    p.write_text(json.dumps(
+        {"kind": "site", "site": "s",
+         "schema_version": SENSOR_SCHEMA_VERSION + 1}) + "\n")
+    with pytest.raises(TraceSchemaError, match="schema_version"):
+        load_trace(str(p))
+
+
+def test_trace_loader_last_row_per_site_wins(tmp_path):
+    rows = [json.loads(line) for line in open(SAMPLE_TRACE)]
+    site_rows = [r for r in rows if r["kind"] == "site"]
+    older = dict(site_rows[0], steps=1)
+    p = tmp_path / "appended.jsonl"
+    with open(p, "w") as f:
+        f.write(json.dumps(older) + "\n")
+        f.write(json.dumps(site_rows[0]) + "\n")
+    trace = load_trace(str(p))
+    assert trace.sites[site_rows[0]["site"]].steps == site_rows[0]["steps"]
+
+
+# ------------------------------------------------------------------ fit layer
+
+def test_fit_sample_trace_bounds_and_coverage():
+    trace = load_trace(SAMPLE_TRACE)
+    cfg = FitConfig()
+    table = fit_trace(trace, cfg)
+    assert set(table) == set(trace.sites)
+    for name, t in table.items():
+        rec = trace.sites[name]
+        assert cfg.min_threshold <= t.sim_threshold <= cfg.max_threshold
+        assert t.block_k in (64, 128, 256, 512)
+        assert t.block_k <= max(64, rec.in_features)
+        assert t.min_work_flops > 0
+        assert t.hysteresis_steps >= 1
+
+
+def test_fit_admits_profitable_small_sites_and_rejects_dead_ones():
+    """The per-site min_work replaces the global small-layer cutoff: a small
+    site with measured harvest is admitted; a zero-similarity site is not."""
+    trace = load_trace(SAMPLE_TRACE)
+    name, rec = next(iter(trace.sites.items()))
+    good = fit_trace(trace)[name]
+    # sample trace is a high-similarity stream: the (small, reduced-scale)
+    # site must be admitted even though its work is far below the global cutoff
+    assert good.min_work_flops <= rec.work_flops
+    # same geometry, dead stream -> pinned out
+    import dataclasses
+
+    dead = dataclasses.replace(rec, hit_rate=0.0, tile_skip_rate=0.0,
+                               weight_byte_skip_rate=0.0, mac_skip_rate=0.0,
+                               mode="basic")
+    from repro.tune import fit_site
+
+    t = fit_site(dead)
+    assert t.min_work_flops > rec.work_flops
+
+
+# ---------------------------------------------------------------- table layer
+
+def test_table_round_trip_identical_decide_mode(tmp_path):
+    """fit -> save -> load must reproduce the exact same decide_mode
+    decisions as the in-memory fit, across sites and a similarity grid."""
+    trace = load_trace(SAMPLE_TRACE)
+    table = fit_trace(trace)
+    path = tmp_path / "tuned.json"
+    save_table(str(path), table, meta={"trace": SAMPLE_TRACE})
+    reloaded = load_table(str(path))
+    assert reloaded == table
+
+    from repro.core import ReuseSiteSpec
+
+    pol_mem = ReusePolicy(site_tunables=table)
+    pol_disk = load_tuned_policy(str(path))
+    for name, rec in trace.sites.items():
+        spec = ReuseSiteSpec(name, rec.in_features, rec.out_features)
+        for sim in np.linspace(0.0, 1.0, 21):
+            for cur in (None, "reuse", "basic"):
+                assert pol_mem.decide_mode(spec, float(sim), current_mode=cur) \
+                    == pol_disk.decide_mode(spec, float(sim), current_mode=cur)
+
+
+def test_load_table_rejects_wrong_kind_and_version(tmp_path):
+    bad_kind = tmp_path / "bad_kind.json"
+    bad_kind.write_text(json.dumps({"kind": "nope", "schema_version": 1,
+                                    "sites": {}}))
+    with pytest.raises(TableSchemaError, match="reuse_tuned_table"):
+        load_table(str(bad_kind))
+    bad_ver = tmp_path / "bad_ver.json"
+    bad_ver.write_text(json.dumps({"kind": "reuse_tuned_table",
+                                   "schema_version": 99, "sites": {}}))
+    with pytest.raises(TableSchemaError, match="schema_version"):
+        load_table(str(bad_ver))
+
+
+def test_site_tunables_dict_round_trip():
+    t = SiteTunables(sim_threshold=0.12, min_work_flops=1e5, block_k=128,
+                     hysteresis_margin=0.1, hysteresis_steps=3)
+    assert SiteTunables.from_dict(t.to_dict()) == t
+    # unknown keys from future schema minor-extensions are tolerated
+    assert SiteTunables.from_dict(dict(t.to_dict(), future_knob=1)) == t
+
+
+# ------------------------------------------------------------ the closed loop
+
+def test_end_to_end_tuned_policy_beats_default(tmp_path):
+    """Acceptance demo: record -> fit -> reload -> the tuned table changes
+    refresh_modes decisions AND harvests no less measured skipped-MAC
+    fraction than the default policy on a high-similarity stream."""
+    from repro.sensor.runner import run_measured_decode
+
+    arch, steps, batch, corr = "qwen3-32b", 6, 2, 0.95
+
+    # 1. record a sensor trace (modes pinned: pure measurement run)
+    md = run_measured_decode(arch, steps=steps, batch=batch, correlation=corr)
+    trace_path = tmp_path / "trace.jsonl"
+    md.report.write_jsonl(str(trace_path), mode="w")
+
+    # 2. fit, serialize, reload
+    table = fit_trace(load_trace(str(trace_path)))
+    table_path = tmp_path / "tuned.json"
+    save_table(str(table_path), table)
+    tuned = load_tuned_policy(str(table_path))
+    default = ReusePolicy()
+
+    # 3. at the recorded operating point, at least one per-site decision
+    #    differs from the global-constant policy
+    diffs = 0
+    for name, spec in md.engine.sites.items():
+        ema = float(jnp.mean(md.cache[name]["sim_ema"]))
+        if tuned.decide_mode(spec, ema) != default.decide_mode(spec, ema):
+            diffs += 1
+    assert diffs >= 1
+
+    # 4. live comparison with the host-side refresh running: the default
+    #    global constants demote the (reduced-scale) sites; the tuned table
+    #    keeps the measured-profitable ones in reuse mode and harvests at
+    #    least as much skipped-MAC fraction
+    md_def = run_measured_decode(arch, steps=steps, batch=batch,
+                                 correlation=corr, refresh_policy=True)
+    md_tun = run_measured_decode(arch, steps=steps, batch=batch,
+                                 correlation=corr, refresh_policy=True,
+                                 policy=tuned)
+    assert md_def.engine.modes != md_tun.engine.modes
+    assert any(m == "reuse" for m in md_tun.engine.modes.values())
+    skip_def = md_def.report.model["mac_skip_rate"]
+    skip_tun = md_tun.report.model["mac_skip_rate"]
+    assert skip_tun >= skip_def
+    assert skip_tun > 0.5  # high-similarity stream: real harvest, not a tie
