@@ -11,6 +11,7 @@ Output: ``name,us_per_call,derived`` CSV rows.
   per_layer        Fig. 12                     layer pool + saturation
   energy           Fig. 13/14                  analytic energy reduction
   kernels          (implementation)            Pallas interpret vs oracle
+  wallclock        (implementation)            measured step time per exec path
   roofline_table   §Roofline deliverable       full cell table -> markdown
 """
 
@@ -40,6 +41,7 @@ def main() -> None:
         similarity,
         software_reuse,
         speedup,
+        wallclock,
     )
     from benchmarks.common import emit
 
@@ -52,6 +54,7 @@ def main() -> None:
     _run("similarity", similarity.main, emit)
     _run("moe_stickiness", moe_stickiness.main, emit)
     _run("kernels", kernel_bench.main, emit)
+    _run("wallclock", lambda _emit: wallclock.main(["--tiny"]), emit)
     _run("roofline_table", roofline_table.main, emit)
 
 

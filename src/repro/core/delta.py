@@ -102,3 +102,16 @@ def compact_block_indices(block_mask_row: jax.Array) -> tuple[jax.Array, jax.Arr
     tail_fill = idx[last]
     idx = jnp.where(jnp.arange(gk) < count, idx, tail_fill)
     return idx, count
+
+
+def compact_rows(block_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row front-compaction of a [gm, gk] tile mask.
+
+    Returns (idx [gm, gk], counts [gm]): row m's first counts[m] entries are
+    its active K-block ids in order, the tail repeats the last valid id. This
+    is the scalar-prefetch payload of the ragged compacted-grid kernel
+    (kernels/reuse_matmul_ragged.py) and the occupancy signal the accounting
+    helpers consume.
+    """
+    idx, counts = jax.vmap(compact_block_indices)(block_mask)
+    return idx, counts

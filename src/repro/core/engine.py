@@ -55,7 +55,9 @@ class ReuseEngine:
         dataflow = self.policy.decide_dataflow(in_features, out_features)
         # The policy's per-site table overrides the caller's tile granularity;
         # the resolved block_k lands in the spec and from there reaches the
-        # Pallas kernel dispatch (reuse_linear → ops.reuse_matmul).
+        # Pallas kernel dispatch (reuse_linear → ops.reuse_matmul). The same
+        # resolution carries the execution substrate: a tuned exec_path /
+        # max_active_k selects the compacted tier right at registration.
         block_k = self.policy.resolve_block_k(name, block_k)
         spec = ReuseSiteSpec(
             name=name,
@@ -66,6 +68,8 @@ class ReuseEngine:
             block_n=block_n,
             mode=mode,
             dataflow=dataflow,
+            exec_path=self.policy.resolve_exec_path(name),
+            max_active_k=self.policy.resolve_max_active_k(name),
         )
         self.sites[name] = spec
         self.stacking[name] = n_layers
@@ -106,7 +110,11 @@ class ReuseEngine:
         mode, and a freshly-flipped site is frozen for its tunables'
         `hysteresis_steps` passes so modes can't oscillate reuse↔basic across
         consecutive refreshes). Suppressed flips are counted into the site's
-        sensor counters. Returns the sites whose mode changed."""
+        sensor counters. The same pass re-decides each site's execution
+        substrate (`exec_path`) from its measured tile-skip rate — a site
+        whose stream turns out highly skippable is promoted onto the ragged/
+        compacted tier. Returns the sites whose mode or exec_path changed
+        (both cost a retrace, so callers rebuild the jitted step)."""
         changed = {}
         for name, spec in self.sites.items():
             ema = cache[name]["sim_ema"]
@@ -126,6 +134,47 @@ class ReuseEngine:
                 continue
             self.modes[name] = new_mode
             changed[name] = new_mode
+            self.cooldown[name] = self.policy.resolve(name).hysteresis_steps
+        changed.update(self.refresh_exec_paths(cache))
+        return changed
+
+    def refresh_exec_paths(self, cache: dict[str, Any]) -> dict[str, str]:
+        """Promote/demote execution substrates from MEASURED skip rates.
+
+        Cumulative tile counters smooth the signal, and exec flips share the
+        mode-flip cooldown (each one retraces the step, so a site frozen
+        after any flip stays frozen here too); a site with no measured reuse
+        evaluations keeps its current path. Returns {site: "exec:<path>"}
+        for sites that moved."""
+        from repro.core.reuse_cache import resolve_exec_path
+
+        changed: dict[str, str] = {}
+        for name, spec in self.sites.items():
+            sensor = cache[name].get("sensor")
+            if sensor is None:
+                continue
+            skipped = float(jnp.sum(sensor["skipped_tiles"]))
+            computed = float(jnp.sum(sensor["computed_tiles"]))
+            total = skipped + computed
+            if total <= 0:
+                continue
+            new_path = self.policy.decide_exec_path(
+                spec, skipped / total, impl=self.impl
+            )
+            if new_path == resolve_exec_path(spec, self.impl):
+                continue
+            if self.cooldown.get(name, 0) > 0:
+                continue
+            gk = -(-spec.in_features // spec.block_k)
+            budget = None
+            if new_path in ("ragged", "compact"):
+                budget = self.policy.resolve_max_active_k(name)
+                if budget is None:
+                    budget = self.policy.ragged_budget(gk, skipped / total)
+            self.sites[name] = dataclasses.replace(
+                spec, exec_path=new_path, max_active_k=budget
+            )
+            changed[name] = f"exec:{new_path}"
             self.cooldown[name] = self.policy.resolve(name).hysteresis_steps
         return changed
 

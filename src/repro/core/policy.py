@@ -26,14 +26,27 @@ during which `ReuseEngine.refresh_modes` suppresses flip-backs.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Mapping
 
-from repro.core.reuse_cache import ReuseSiteSpec
+from repro.core.reuse_cache import ReuseSiteSpec, default_exec_path
 
 DEFAULT_SIM_THRESHOLD = 0.20
 DEFAULT_MIN_WORK_FLOPS = float(2**24)
 DEFAULT_HYSTERESIS_MARGIN = 0.05
 DEFAULT_HYSTERESIS_STEPS = 1
+
+# Break-even tile-skip rate above which a compacted execution tier (ragged
+# grid on Pallas, gathered GEMM on jnp) beats the masked full-grid walk.
+# Model: the compacted grid runs ceil(occupancy · headroom · gk) of gk steps
+# but adds the per-row index/count bookkeeping and risks the overflow
+# fallback; below ~25 % skip the shrink cannot amortize either.
+RAGGED_BREAK_EVEN_SKIP = 0.25
+# Budget headroom over the measured occupancy, so mild skip-rate jitter does
+# not trip the (full-extent) overflow fallback every few steps.
+RAGGED_BUDGET_HEADROOM = 1.25
+
+EXEC_PATHS = ("kernel", "ragged", "compact", "dense")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +67,19 @@ class SiteTunables:
     # `hysteresis_steps` refresh passes (each flip costs a recompile).
     hysteresis_margin: float = DEFAULT_HYSTERESIS_MARGIN
     hysteresis_steps: int = DEFAULT_HYSTERESIS_STEPS
+    # Pinned execution substrate for the reuse-mode ΔW GEMM; None lets the
+    # policy decide from measured skip rate (see decide_exec_path).
+    exec_path: str | None = None
+    # Static k-extent budget for the compacted paths, in K-blocks of the
+    # site's (possibly tuned) block_k; None = full extent.
+    max_active_k: int | None = None
+
+    def __post_init__(self) -> None:
+        # Fail at table-load/fit time, not inside the traced serve step.
+        if self.exec_path is not None and self.exec_path not in EXEC_PATHS:
+            raise ValueError(
+                f"exec_path {self.exec_path!r} not in {EXEC_PATHS}"
+            )
 
     def to_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -115,6 +141,43 @@ class ReusePolicy:
     def resolve_block_k(self, site: str, default: int) -> int:
         bk = self.resolve(site).block_k
         return default if bk is None else int(bk)
+
+    def resolve_exec_path(self, site: str, default: str = "auto") -> str:
+        p = self.resolve(site).exec_path
+        return default if p is None else p
+
+    def resolve_max_active_k(self, site: str) -> int | None:
+        mak = self.resolve(site).max_active_k
+        return None if mak is None else int(mak)
+
+    def decide_exec_path(
+        self, spec: ReuseSiteSpec, skip_rate: float, *, impl: str = "jnp"
+    ) -> str:
+        """Execution substrate for one site from its MEASURED tile-skip rate.
+
+        A tuned `exec_path` pins the decision. Otherwise: above the break-even
+        skip rate the compacted tier wins — "ragged" on the Pallas impls
+        (compacted grid: skipped tiles cost zero grid steps), "compact" on
+        jnp (gathered GEMM: the CPU-measurable equivalent). Below it, the
+        masked full-grid kernel ("kernel" on Pallas, "dense" on jnp) costs
+        less than the compaction bookkeeping. Sites whose K extent is a
+        single tile have nothing to compact.
+        """
+        t = self.resolve(spec.name)
+        if t.exec_path is not None:
+            return t.exec_path
+        gk = -(-spec.in_features // spec.block_k)
+        if gk >= 2 and skip_rate >= RAGGED_BREAK_EVEN_SKIP:
+            return "ragged" if impl != "jnp" else "compact"
+        return default_exec_path(impl)
+
+    @staticmethod
+    def ragged_budget(gk: int, skip_rate: float) -> int:
+        """Static k-extent budget for a compacted path: measured occupancy
+        plus headroom, clamped to [1, gk]."""
+        occ = max(0.0, min(1.0, 1.0 - skip_rate))
+        want = math.ceil(gk * occ * RAGGED_BUDGET_HEADROOM)
+        return max(1, min(gk, want))
 
     def decide_dataflow(self, in_features: int, out_features: int) -> str:
         """Paper Sec. VI-A: 3DUnet's large-input/small-output GEMMs regress

@@ -45,7 +45,31 @@ class ReuseSiteSpec:
     mode: str = "auto"
     # "output" | "input" stationary — kernel grid iteration order.
     dataflow: str = "output"
+    # Execution substrate for the reuse-mode ΔW GEMM (see kernels/ops.py):
+    # "kernel" (masked full grid) | "ragged" (compacted grid) | "compact"
+    # (jnp gather) | "dense" (jnp masked GEMM). "auto" resolves per impl:
+    # Pallas impls get "kernel", jnp gets "dense" — the pre-exec_path
+    # behaviour. The policy promotes it from measured skip rate.
+    exec_path: str = "auto"
+    # Static k-extent budget for the ragged/compact paths (in K-blocks);
+    # None = full extent. Overflowing steps fall back at runtime.
+    max_active_k: int | None = None
     fixed_scale: float = 0.05  # activation scale; sites may recalibrate
+
+
+def default_exec_path(impl: str) -> str:
+    """The substrate an "auto" site runs on: the masked Pallas kernel on the
+    Pallas impls, the jnp masked GEMM on jnp — the pre-exec_path behaviour.
+    The single source of the impl→path mapping (policy fallthrough, engine
+    no-op detection and reuse_linear dispatch all call through here)."""
+    return "kernel" if impl != "jnp" else "dense"
+
+
+def resolve_exec_path(spec: ReuseSiteSpec, impl: str) -> str:
+    """The execution substrate a site call will actually run."""
+    if spec.exec_path == "auto":
+        return default_exec_path(impl)
+    return spec.exec_path
 
 
 def init_site_cache(spec: ReuseSiteSpec, batch: int) -> dict[str, jax.Array]:

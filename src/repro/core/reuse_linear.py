@@ -18,6 +18,14 @@ memory-bound — precisely where skipping weight-tile DMAs pays.
     "jnp"              — pure-jnp semantics (fast on CPU; what the dry-run lowers)
     "pallas_interpret" — the real kernels, interpreted on CPU (tests)
     "pallas"           — the real kernels, compiled for TPU (target hardware)
+
+`spec.exec_path` selects the reuse-mode GEMM within a substrate (see
+kernels/ops.py): "kernel" masked full grid, "ragged" compacted grid,
+"compact" jnp gather, "dense" jnp masked GEMM. "auto" preserves the historic
+mapping (Pallas impls → "kernel", jnp → "dense"); the policy promotes sites
+off it from measured skip rate. On the Pallas impls the quantize → delta →
+tile-mask chain runs as ONE fused pass (kernels/delta_quant.py) instead of
+the three-op jnp chain, so the delta tensor crosses HBM once.
 """
 
 from __future__ import annotations
@@ -27,16 +35,39 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.delta import delta_encode
-from repro.core.reuse_cache import ReuseSiteSpec
+from repro.core.delta import DeltaEncoding, delta_encode
+from repro.core.reuse_cache import ReuseSiteSpec, resolve_exec_path
 from repro.core.similarity import ema_update, row_code_similarity
 from repro.kernels import ops
+from repro.quant import dequantize_int8, quantize_int8
 from repro.sensor.counters import update_on_basic, update_on_reuse
 
 
 class ReuseStats(NamedTuple):
     similarity: jax.Array     # code-level similarity this call
     skip_fraction: jax.Array  # fraction of weight tiles skipped this call
+
+
+def _encode(
+    xm: jax.Array, cache: dict[str, jax.Array], spec: ReuseSiteSpec,
+    w_dtype, impl: str,
+) -> DeltaEncoding:
+    """Quantize + delta + tile mask: fused single pass on the Pallas impls,
+    the jnp three-op chain otherwise."""
+    if impl == "jnp":
+        return delta_encode(
+            xm, cache["prev_q"], cache["scale"],
+            block_m=spec.block_m, block_k=spec.block_k,
+            compute_dtype=w_dtype,
+        )
+    cur_q, delta, mask = ops.delta_quant_fused(
+        xm, cache["prev_q"], cache["scale"],
+        block_m=spec.block_m, block_k=spec.block_k,
+        delta_dtype=w_dtype, interpret=(impl != "pallas"),
+    )
+    skip = 1.0 - jnp.mean(mask.astype(jnp.float32))
+    return DeltaEncoding(delta=delta, cur_q=cur_q, block_mask=mask,
+                         skip_fraction=skip)
 
 
 def reuse_linear(
@@ -60,8 +91,6 @@ def reuse_linear(
     if mode == "basic":
         # ReuseSensor+ReuseOFF: the generated basic kernel (Fig. 7-A) — plain
         # quantized GEMM, no delta/cache bookkeeping beyond refreshing state.
-        from repro.quant import dequantize_int8, quantize_int8
-
         cur_q = quantize_int8(xm, cache["scale"])
         out = jnp.dot(
             dequantize_int8(cur_q, cache["scale"], dtype=xm.dtype),
@@ -86,23 +115,56 @@ def reuse_linear(
             )
         stats = ReuseStats(similarity=sim, skip_fraction=jnp.zeros(()))
     elif mode == "reuse":
-        enc = delta_encode(
-            xm, cache["prev_q"], cache["scale"],
-            block_m=spec.block_m, block_k=spec.block_k,
-            compute_dtype=w.dtype,
-        )
-        if impl == "jnp":
+        enc = _encode(xm, cache, spec, w.dtype, impl)
+        path = resolve_exec_path(spec, impl)
+        gm, gk = enc.block_mask.shape
+        gn = -(-n // spec.block_n)
+        interpret = impl != "pallas"
+        sel = None
+        dma_issued = None
+        grid_steps = None
+        if path == "dense":
             out = ops.reuse_matmul_ref(
                 enc.delta, w, cache["prev_out"], enc.block_mask,
                 spec.block_m, spec.block_k,
             )
-        else:
+        elif path == "compact":
+            k_mask = jnp.max(enc.block_mask, axis=0)
+            out = ops.reuse_matmul_compact(
+                enc.delta, w, cache["prev_out"], k_mask,
+                block_k=spec.block_k, max_blocks=spec.max_active_k,
+            )
+            # The gather streams each live K-block's weight panel once,
+            # shared across all rows.
+            dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn
+            grid_steps = ops.ragged_grid_steps(
+                jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
+                gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+            )
+        elif path == "ragged":
+            idx, counts = ops.compact_rows(enc.block_mask)
+            out = ops.reuse_matmul_ragged(
+                enc.delta, w, cache["prev_out"], enc.block_mask,
+                block_m=spec.block_m, block_n=spec.block_n,
+                block_k=spec.block_k, max_active_k=spec.max_active_k,
+                interpret=interpret, compacted=(idx, counts),
+            )
+            dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
+            grid_steps = ops.ragged_grid_steps(
+                counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+            )
+        elif path == "kernel":
+            sel = ops.skip_sel(enc.block_mask)
             out = ops.reuse_matmul(
                 enc.delta, w, cache["prev_out"], enc.block_mask,
                 block_m=spec.block_m, block_n=spec.block_n,
                 block_k=spec.block_k,
                 dataflow=spec.dataflow,
-                interpret=(impl == "pallas_interpret"),
+                interpret=interpret, sel=sel,
+            )
+        else:
+            raise ValueError(
+                f"unknown exec_path {path!r} for site {spec.name!r}"
             )
         row_sim = row_code_similarity(enc.cur_q, cache["prev_q"])
         sim = jnp.mean(row_sim)
@@ -114,14 +176,16 @@ def reuse_linear(
             steps=cache["steps"] + 1,
         )
         if "sensor" in cache:
-            gn = -(-n // spec.block_n)
+            if dma_issued is None:  # kernel/dense: masked full-grid semantics
+                dma_issued = ops.weight_dma_tiles(
+                    enc.block_mask, gn=gn, dataflow=spec.dataflow, sel=sel,
+                )
             new_cache["sensor"] = update_on_reuse(
                 cache["sensor"], block_mask=enc.block_mask, row_sim=row_sim,
                 block_m=spec.block_m, block_k=spec.block_k, n=n, gn=gn,
                 w_itemsize=w.dtype.itemsize,
-                dma_issued=ops.weight_dma_tiles(
-                    enc.block_mask, gn=gn, dataflow=spec.dataflow
-                ),
+                dma_issued=dma_issued,
+                grid_steps=grid_steps,
             )
         stats = ReuseStats(similarity=sim, skip_fraction=enc.skip_fraction)
     else:

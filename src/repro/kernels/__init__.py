@@ -2,6 +2,9 @@
 
   reuse_matmul.py      — block-skip ΔW GEMM (ReuseSensor analogue; skips the
                          HBM→VMEM weight-tile DMA and the MXU op per zero tile)
+  reuse_matmul_ragged.py — compacted-grid ΔW GEMM: the k-extent is the
+                         measured-occupancy budget, so skipped tiles cost
+                         zero grid steps (the wall-clock tier)
   reuse_matmul_int8.py — int8×int8→int32 variant (the mla8 analogue)
   delta_quant.py       — fused quantize + delta + tile-mask pass
   wkv6_decode.py       — fused RWKV6 decode step (one state pass instead of

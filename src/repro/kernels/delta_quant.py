@@ -39,7 +39,7 @@ def _kernel(scale_ref, x_ref, prev_q_ref, q_ref, delta_ref, mask_ref):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_m", "block_k", "interpret")
+    jax.jit, static_argnames=("block_m", "block_k", "delta_dtype", "interpret")
 )
 def delta_quant(
     x: jax.Array,        # [M, K] float
@@ -48,9 +48,12 @@ def delta_quant(
     *,
     block_m: int = 128,
     block_k: int = 256,
+    delta_dtype=jnp.bfloat16,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (cur_q int8 [M,K], delta bf16 [M,K], mask int32 [gm,gk])."""
+    """Returns (cur_q int8 [M,K], delta [M,K] in delta_dtype, mask int32
+    [gm,gk]). `delta_dtype` follows the weight dtype of the consuming GEMM:
+    f32 weights need an f32 delta to keep the telescoping invariant exact."""
     m, k = x.shape
     assert m % block_m == 0 and k % block_k == 0, (x.shape, block_m, block_k)
     gm, gk = m // block_m, k // block_k
@@ -76,7 +79,7 @@ def delta_quant(
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((m, k), jnp.int8),
-            jax.ShapeDtypeStruct((m, k), jnp.bfloat16),
+            jax.ShapeDtypeStruct((m, k), delta_dtype),
             jax.ShapeDtypeStruct((gm, gk), jnp.int32),
         ],
         interpret=interpret,

@@ -1,12 +1,20 @@
 """Public kernel API: padding, batch flattening, path dispatch.
 
-Paths (per DESIGN.md §2):
-  "kernel"  — Pallas block-skip GEMM (structural skipping; TPU target,
-              interpret=True on CPU).
+Execution paths (per DESIGN.md §2; `ReuseSiteSpec.exec_path` selects one):
+  "kernel"  — Pallas block-skip GEMM on the FULL (gm, gn, gk) grid: skipped
+              tiles suppress the weight DMA and the MXU op but still cost a
+              grid step (TPU target, interpret=True on CPU).
+  "ragged"  — Pallas compacted-grid GEMM: the grid k-extent is a static
+              budget `max_active_k` < gk; scalar-prefetched front-compacted
+              indices walk only the ACTIVE tiles, so skipped tiles cost zero
+              grid steps. Runtime falls back to the full extent when a row's
+              live count overflows the budget (correctness never depends on
+              the policy's guess).
   "compact" — gather the nonzero K-blocks of Δ and the matching W row-blocks,
               dense GEMM on the compacted operands (MegaBlocks-style;
               beyond-paper). Pure jnp, shardable under pjit, and the path the
-              CPU wall-clock benchmarks measure.
+              CPU wall-clock benchmarks measure. With a static `max_blocks`
+              budget the GEMM shape shrinks (same overflow fallback).
   "masked"  — branchless jnp.where software reuse (the paper's Sec.-III
               negative result: costs MORE than dense — kept as a benchmark).
   "dense"   — O_p-free ordinary GEMM (the "basic kernel" / reuse-OFF mode).
@@ -20,21 +28,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.delta import compact_block_indices
+from repro.core.delta import compact_block_indices, compact_rows
 from repro.kernels import ref as _ref
 from repro.kernels.delta_quant import delta_quant as delta_quant_kernel
 from repro.kernels.reuse_matmul import reuse_matmul as _reuse_matmul_kernel
-from repro.kernels.reuse_matmul import weight_dma_tiles
+from repro.kernels.reuse_matmul import skip_sel, weight_dma_tiles
 from repro.kernels.reuse_matmul_int8 import reuse_matmul_int8 as _reuse_matmul_int8
+from repro.kernels.reuse_matmul_ragged import (
+    reuse_matmul_ragged as _reuse_matmul_ragged_kernel,
+)
 
 __all__ = [
     "reuse_matmul",
+    "reuse_matmul_ragged",
     "reuse_matmul_compact",
     "reuse_matmul_masked",
     "delta_quant_fused",
     "reuse_matmul_int8",
     "weight_dma_tiles",
+    "ragged_dma_tiles",
+    "ragged_grid_steps",
+    "skip_sel",
+    "compact_rows",
 ]
+
+
+def _clamp_budget(max_active_k: int | None, gk: int) -> int:
+    """Static k-extent budget, clamped to [1, gk]. ONE definition shared by
+    the executing wrappers and the grid-step accounting — the sensor's
+    grid_steps counter is only honest while both see the same extent."""
+    if max_active_k is None:
+        return gk
+    return max(1, min(int(max_active_k), gk))
 
 
 def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
@@ -56,6 +81,7 @@ def reuse_matmul(
     block_k: int = 256,
     dataflow: str = "output",
     interpret: bool = True,
+    sel: jax.Array | None = None,
 ) -> jax.Array:
     """Padded/validated entry to the Pallas block-skip kernel."""
     m, n = prev_out.shape
@@ -67,7 +93,7 @@ def reuse_matmul(
     out = _reuse_matmul_kernel(
         dp, wp, pp, block_mask,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        dataflow=dataflow, interpret=interpret,
+        dataflow=dataflow, interpret=interpret, sel=sel,
     )
     return out[:m, :n]
 
@@ -94,30 +120,98 @@ def reuse_matmul_int8(
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "max_blocks"))
-def reuse_matmul_compact(
+def reuse_matmul_ragged(
     delta: jax.Array,       # [M, K]
     w: jax.Array,           # [K, N]
     prev_out: jax.Array,    # [M, N]
-    k_block_mask: jax.Array,  # [gk] int32 — per-K-block "any row changed"
+    block_mask: jax.Array,  # [gm, gk] int32; 1 = compute tile
     *,
+    block_m: int = 128,
+    block_n: int = 128,
     block_k: int = 256,
-    max_blocks: int | None = None,
+    max_active_k: int | None = None,
+    interpret: bool = True,
+    compacted: tuple[jax.Array, jax.Array] | None = None,  # (idx, counts)
 ) -> jax.Array:
-    """Compaction path: gather nonzero K-blocks of Δ and W, dense GEMM.
+    """Padded entry to the ragged compacted-grid kernel.
 
-    Shared-K masking (one mask bit per K-block across all rows) keeps the
-    gather a clean 2-D slice gather that GSPMD shards on the N axis. With
-    `max_blocks` static (< gk) the GEMM shape shrinks — the static-shape
-    budget mode used for the roofline study; by default all gk blocks are
-    gathered (shape-stable, value-exact, savings appear as skipped DMAs only
-    on real hardware via the kernel path).
+    `max_active_k` is the static k-extent budget (None = gk, i.e. no grid
+    shrink but still compaction-ordered). When any row's live tile count
+    overflows the budget, a `lax.cond` falls back to the full-extent grid —
+    the budget is a performance hint from the policy, never a correctness
+    contract. `compacted` lets the caller thread a precomputed
+    `compact_rows(block_mask)` (reuse_linear shares it with the accounting).
     """
+    m, n = prev_out.shape
+    dp = _pad_to(delta, block_m, block_k)
+    wp = _pad_to(w, block_k, block_n)
+    pp = _pad_to(prev_out.astype(jnp.float32), block_m, block_n)
+    gm, gk = dp.shape[0] // block_m, dp.shape[1] // block_k
+    assert block_mask.shape == (gm, gk), (block_mask.shape, (gm, gk))
+    if compacted is None:
+        idx, counts = compact_rows(block_mask)
+    else:
+        idx, counts = compacted
+    kb = _clamp_budget(max_active_k, gk)
+
+    def run(n_k: int) -> jax.Array:
+        return _reuse_matmul_ragged_kernel(
+            dp, wp, pp, counts, idx[:, :n_k],
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+
+    if kb >= gk:
+        out = run(gk)
+    else:
+        out = jax.lax.cond(
+            jnp.any(counts > kb), lambda: run(gk), lambda: run(kb)
+        )
+    return out[:m, :n]
+
+
+def ragged_dma_tiles(counts: jax.Array, *, gn: int) -> jax.Array:
+    """Measured weight-tile DMA count under the ragged kernel's semantics.
+
+    Per (m, n) output panel the weight index walks the row's `count` active
+    blocks (the compacted tail repeats the last id — no new copy); a
+    fully-skipped row still holds one resident tile. Same (block_k × block_n)
+    tile units as `weight_dma_tiles`.
+    """
+    return (jnp.sum(jnp.maximum(counts, 1)) * gn).astype(jnp.int32)
+
+
+def ragged_grid_steps(
+    counts: jax.Array, *, gm: int, gn: int, gk: int, max_active_k: int | None
+) -> jax.Array:
+    """Grid steps the ragged path actually executes (fallback-aware).
+
+    The compacted grid runs gm·gn·kb steps; when any row overflows the budget
+    the wrapper re-runs the full gm·gn·gk extent, and the accounting must say
+    so — saved steps are counted like saved DMAs: only when truly elided.
+    """
+    kb = _clamp_budget(max_active_k, gk)
+    if kb >= gk:
+        return jnp.asarray(gm * gn * gk, jnp.float32)
+    return jnp.where(
+        jnp.any(counts > kb), float(gm * gn * gk), float(gm * gn * kb)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "max_blocks"))
+def _compact_gemm(
+    delta: jax.Array,
+    w: jax.Array,
+    prev_out: jax.Array,
+    k_block_mask: jax.Array,
+    *,
+    block_k: int,
+    max_blocks: int,
+) -> jax.Array:
     mrows, k = delta.shape
     gk = k // block_k
-    assert k % block_k == 0
     idx, count = compact_block_indices(k_block_mask)
-    nb = max_blocks if max_blocks is not None else gk
+    nb = max_blocks
     idx = idx[:nb]
     # Zero-weight blocks beyond `count` so the tail contributes nothing even
     # when it aliases a real block.
@@ -131,6 +225,46 @@ def reuse_matmul_compact(
         preferred_element_type=jnp.float32,
     )
     return prev_out + upd
+
+
+def reuse_matmul_compact(
+    delta: jax.Array,       # [M, K]
+    w: jax.Array,           # [K, N]
+    prev_out: jax.Array,    # [M, N]
+    k_block_mask: jax.Array,  # [gk] int32 — per-K-block "any row changed"
+    *,
+    block_k: int = 256,
+    max_blocks: int | None = None,
+) -> jax.Array:
+    """Compaction path: gather nonzero K-blocks of Δ and W, dense GEMM.
+
+    Shared-K masking (one mask bit per K-block across all rows) keeps the
+    gather a clean 2-D slice gather that GSPMD shards on the N axis. With
+    `max_blocks` static (< gk) the GEMM shape shrinks — the policy's
+    compacted budget on CPU serving; a `lax.cond` falls back to the full
+    extent whenever the live block count overflows the budget. K is padded
+    to a block_k multiple (padding blocks carry zero deltas and an inactive
+    mask bit, so they are never gathered).
+    """
+    kp = (-delta.shape[1]) % block_k
+    if kp:
+        # The caller's mask is already on the ceil(K/block_k) grid
+        # (block_zero_mask pads virtually); only the operands need real pads.
+        delta = jnp.pad(delta, ((0, 0), (0, kp)))
+        w = jnp.pad(w, ((0, kp), (0, 0)))
+    gk = delta.shape[1] // block_k
+    assert k_block_mask.shape == (gk,), (k_block_mask.shape, gk)
+    prev_out = prev_out.astype(jnp.float32)
+    nb = _clamp_budget(max_blocks, gk)
+
+    def run(n_blocks: int) -> jax.Array:
+        return _compact_gemm(delta, w, prev_out, k_block_mask,
+                             block_k=block_k, max_blocks=n_blocks)
+
+    if nb >= gk:
+        return run(gk)
+    count = jnp.sum((k_block_mask != 0).astype(jnp.int32))
+    return jax.lax.cond(count > nb, lambda: run(gk), lambda: run(nb))
 
 
 def reuse_matmul_masked(
@@ -153,6 +287,7 @@ def delta_quant_fused(
     *,
     block_m: int = 128,
     block_k: int = 256,
+    delta_dtype=jnp.bfloat16,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Padded entry to the fused delta/quant/mask kernel."""
@@ -160,7 +295,8 @@ def delta_quant_fused(
     xp = _pad_to(x, block_m, block_k)
     pq = _pad_to(prev_q, block_m, block_k)
     q, delta, mask = delta_quant_kernel(
-        xp, pq, scale, block_m=block_m, block_k=block_k, interpret=interpret
+        xp, pq, scale, block_m=block_m, block_k=block_k,
+        delta_dtype=delta_dtype, interpret=interpret,
     )
     return q[:m, :k], delta[:m, :k], mask
 

@@ -57,8 +57,17 @@ def _skip_sel(block_mask: jax.Array) -> jax.Array:
     return jnp.maximum(sel, 0).astype(jnp.int32)
 
 
+# Public alias: reuse_linear builds the table once per call and threads it
+# into both the kernel launch and the DMA accounting.
+skip_sel = _skip_sel
+
+
 def weight_dma_tiles(
-    block_mask: jax.Array, *, gn: int, dataflow: str = "output"
+    block_mask: jax.Array,
+    *,
+    gn: int,
+    dataflow: str = "output",
+    sel: jax.Array | None = None,
 ) -> jax.Array:
     """Measured weight-tile DMA count under this kernel's sel semantics.
 
@@ -74,9 +83,11 @@ def weight_dma_tiles(
       weight tiles; masked steps pin both coordinates (no copy issued).
 
     Cheap trace-side math on the [gm, gk] mask — used for accounting, never
-    on the kernel's own critical path.
+    on the kernel's own critical path. When the caller already built the sel
+    table for the kernel launch, pass it as `sel` to avoid recomputing it.
     """
-    sel = _skip_sel(block_mask)
+    if sel is None:
+        sel = _skip_sel(block_mask)
     if dataflow == "output":
         transitions = jnp.sum((sel[:, 1:] != sel[:, :-1]).astype(jnp.int32))
         rows = block_mask.shape[0]
@@ -150,6 +161,7 @@ def reuse_matmul(
     block_k: int = 256,
     dataflow: str = "output",
     interpret: bool = False,
+    sel: jax.Array | None = None,  # precomputed _skip_sel(block_mask)
 ) -> jax.Array:
     """O_c = O_p + Δ·W, skipping weight-tile DMAs and MXU ops for zero tiles."""
     m, k = delta.shape
@@ -163,7 +175,8 @@ def reuse_matmul(
     gm, gk, gn = m // block_m, k // block_k, n // block_n
     assert block_mask.shape == (gm, gk), (block_mask.shape, (gm, gk))
 
-    sel = _skip_sel(block_mask)
+    if sel is None:
+        sel = _skip_sel(block_mask)
 
     if dataflow == "output":
         grid = (gm, gn, gk)

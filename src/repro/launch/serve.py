@@ -96,11 +96,15 @@ def main() -> None:
                 t_mode = engine.policy.decide_mode(spec, 1.0)
                 moved = (d_mode != t_mode
                          or abs(t.sim_threshold - default.sim_threshold) > 1e-9
-                         or t.block_k is not None)
+                         or t.block_k is not None
+                         or t.exec_path is not None)
                 if moved:
+                    budget = (f"@{spec.max_active_k}"
+                              if spec.max_active_k is not None else "")
                     print(f"  tuned delta {name}: mode@sim=1 {d_mode}->"
                           f"{t_mode} thr={t.sim_threshold:.3f} "
-                          f"block_k={spec.block_k}")
+                          f"block_k={spec.block_k} "
+                          f"exec={spec.exec_path}{budget}")
 
     # Batched-prefill simplification: slot prefill re-runs the batch prefill
     # with the slot's prompt in its lane (a production server runs a separate

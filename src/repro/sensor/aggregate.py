@@ -27,7 +27,9 @@ import numpy as np
 #   1 — PR 1 emission (implicit; rows carried no version field)
 #   2 — adds schema_version, suppressed_flips, and site geometry
 #       (in_features/out_features/block_m/block_k/block_n) on site/layer rows
-SENSOR_SCHEMA_VERSION = 2
+#   3 — adds grid_steps (measured grid-step counter; dense baseline is
+#       total_tiles · gn) and exec_path on site/layer rows
+SENSOR_SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass
@@ -50,6 +52,11 @@ class SiteSensor:
     slot_hit_rates: list[float]
     slot_steps: list[int]      # lanes with 0 steps are excluded from hit_rate
     suppressed_flips: int = 0  # hysteresis-vetoed mode flips (site-level)
+    # Measured grid steps (k-tile visits × n panels); the dense baseline is
+    # total_tiles · gn. Only the compacted tiers (ragged/compact) shrink it.
+    grid_steps: float = 0.0
+    # Execution substrate the site is currently dispatched on.
+    exec_path: str = "auto"
     # Site geometry — what the tune fitter needs to model bookkeeping cost
     # and pick a block_k without re-deriving the model architecture.
     in_features: int = 0
@@ -79,6 +86,22 @@ class SiteSensor:
         return self.skipped_weight_bytes / max(self.total_weight_bytes, 1e-9)
 
     @property
+    def dense_grid_steps(self) -> float:
+        """Grid steps a dense walk of the same evaluations would have cost."""
+        gn = -(-self.out_features // self.block_n) if self.block_n else 0
+        return float(self.total_tiles * gn)
+
+    @property
+    def grid_step_skip_rate(self) -> float:
+        """Fraction of dense grid steps the execution path truly elided —
+        zero on the masked kernel (which visits every tile), positive only
+        on the compacted tiers (ragged grid / budgeted compact GEMM)."""
+        dense = self.dense_grid_steps
+        if dense <= 0:
+            return 0.0
+        return max(0.0, 1.0 - self.grid_steps / dense)
+
+    @property
     def hit_rate(self) -> float:
         """Mean per-slot hit rate over ACTIVE lanes (slot_steps > 0).
 
@@ -97,6 +120,7 @@ class SiteSensor:
             total_macs=self.total_macs,
             mac_skip_rate=self.mac_skip_rate,
             weight_byte_skip_rate=self.weight_byte_skip_rate,
+            grid_step_skip_rate=self.grid_step_skip_rate,
             hit_rate=self.hit_rate,
         )
         return d
@@ -117,13 +141,16 @@ class SensorReport:
             f"mac_skip={self.model['mac_skip_rate']:.1%} "
             f"weight_byte_skip={self.model['weight_byte_skip_rate']:.1%} "
             f"tile_skip={self.model['tile_skip_rate']:.1%} "
+            f"grid_step_skip={self.model.get('grid_step_skip_rate', 0.0):.1%} "
             f"hit_rate={self.model['hit_rate']:.3f}"
         ]
         for s in self.per_site:
             lines.append(
-                f"  {s.site:24s} mode={s.mode:5s} steps={s.steps:4d} "
+                f"  {s.site:24s} mode={s.mode:5s} exec={s.exec_path:7s} "
+                f"steps={s.steps:4d} "
                 f"tile_skip={s.tile_skip_rate:6.1%} "
                 f"mac_skip={s.mac_skip_rate:6.1%} "
+                f"grid_skip={s.grid_step_skip_rate:6.1%} "
                 f"hit={s.hit_rate:.3f} transitions={s.mode_transitions} "
                 f"suppressed={s.suppressed_flips}"
             )
@@ -142,8 +169,13 @@ class SensorReport:
                 f.write(json.dumps(row) + "\n")
 
 
-def _entry_rows(name: str, mode: str, entry: dict, spec=None) -> list[SiteSensor]:
-    """One SiteSensor per leading-layer slice of a cache entry's counters."""
+def _entry_rows(name: str, mode: str, entry: dict, spec=None,
+                impl: str = "jnp") -> list[SiteSensor]:
+    """One SiteSensor per leading-layer slice of a cache entry's counters.
+
+    The emitted exec_path is the RESOLVED substrate ("auto" mapped through
+    the impl), so offline trace consumers see the path that actually ran."""
+    from repro.core.reuse_cache import resolve_exec_path
     sensor = entry["sensor"]
     skipped = np.asarray(sensor["skipped_tiles"])
     stacked = skipped.ndim >= 1
@@ -176,6 +208,9 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None) -> list[SiteSensor
             slot_steps=[int(s) for s in slot_steps],
             suppressed_flips=int(leaf("suppressed_flips", layer))
             if "suppressed_flips" in sensor else 0,
+            grid_steps=float(leaf("grid_steps", layer))
+            if "grid_steps" in sensor else 0.0,
+            exec_path=resolve_exec_path(spec, impl) if spec else "auto",
             in_features=spec.in_features if spec else 0,
             out_features=spec.out_features if spec else 0,
             block_m=spec.block_m if spec else 0,
@@ -207,6 +242,8 @@ def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
         # suppression is a site-level event bumped on every layer slice at
         # once, so max (not sum) recovers the event count
         suppressed_flips=max(r.suppressed_flips for r in rows),
+        grid_steps=sum(r.grid_steps for r in rows),
+        exec_path=rows[0].exec_path,
         in_features=rows[0].in_features,
         out_features=rows[0].out_features,
         block_m=rows[0].block_m,
@@ -219,12 +256,13 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
     """Reduce a reuse cache's sensor counters. `engine` supplies site specs
     and current kernelModes (duck-typed: .sites / .modes)."""
     per_site, per_layer = [], []
+    impl = getattr(engine, "impl", "jnp")
     for name in engine.sites:
         entry = cache[name]
         if "sensor" not in entry:
             continue
         rows = _entry_rows(name, engine.modes[name], entry,
-                           spec=engine.sites[name])
+                           spec=engine.sites[name], impl=impl)
         if rows[0].layer is not None:
             per_layer += rows
         per_site.append(_sum_rows(name, engine.modes[name], rows))
@@ -233,10 +271,12 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         k: sum(getattr(s, k) for s in per_site)
         for k in ("skipped_tiles", "computed_tiles", "skipped_macs",
                   "computed_macs", "skipped_weight_bytes", "total_weight_bytes",
-                  "reused_out_elems", "mode_transitions", "suppressed_flips")
+                  "reused_out_elems", "mode_transitions", "suppressed_flips",
+                  "grid_steps")
     }
     total_tiles = tot["skipped_tiles"] + tot["computed_tiles"]
     total_macs = tot["skipped_macs"] + tot["computed_macs"]
+    dense_grid = sum(s.dense_grid_steps for s in per_site)
     model = dict(
         tot,
         steps=max((s.steps for s in per_site), default=0),
@@ -247,6 +287,9 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         mac_skip_rate=tot["skipped_macs"] / max(total_macs, 1e-9),
         weight_byte_skip_rate=(
             tot["skipped_weight_bytes"] / max(tot["total_weight_bytes"], 1e-9)
+        ),
+        grid_step_skip_rate=max(
+            0.0, 1.0 - tot["grid_steps"] / max(dense_grid, 1e-9)
         ),
         hit_rate=float(np.mean([s.hit_rate for s in per_site])) if per_site else 0.0,
     )

@@ -44,6 +44,12 @@ def init_site_counters(batch: int) -> dict[str, jax.Array]:
         "total_weight_bytes": jnp.zeros((), jnp.float32),
         "reused_out_elems": jnp.zeros((), jnp.float32),
         "dma_issued_tiles": jnp.zeros((), jnp.int32),
+        # Grid steps the execution path actually walked, in (k-tile visit ×
+        # n-panel) units — dense baseline is gm·gk·gn per evaluation. Only
+        # the compacted tiers (ragged grid, budgeted compact GEMM) shrink
+        # this — the masked kernel visits every tile; saved steps are
+        # accounted like saved DMAs (only when truly elided).
+        "grid_steps": jnp.zeros((), jnp.float32),
         # kernelMode tracking: -1 = never evaluated, 0 = basic, 1 = reuse.
         "mode_flag": jnp.full((), -1, jnp.int32),
         "mode_transitions": jnp.zeros((), jnp.int32),
@@ -75,12 +81,15 @@ def update_on_reuse(
     gn: int,
     w_itemsize: int,
     dma_issued: jax.Array | None = None,  # measured DMA count (kernel semantics)
+    grid_steps: jax.Array | None = None,  # measured grid steps (ragged paths)
 ) -> dict[str, jax.Array]:
     """Account one reuse-mode evaluation from its tile mask.
 
     dma_issued_tiles is in (block_k × block_n) weight-tile units everywhere
     (a dense stream of the site is gm·gk·gn such tiles per step), so the
-    counter stays comparable across mode flips."""
+    counter stays comparable across mode flips. grid_steps defaults to the
+    full masked-grid walk gm·gk·gn (the "kernel"/"dense" paths visit every
+    tile even when they skip its DMA and MXU op)."""
     gm, gk = block_mask.shape
     computed = jnp.sum(block_mask).astype(jnp.int32)
     total = jnp.int32(gm * gk)
@@ -106,6 +115,9 @@ def update_on_reuse(
         dma_issued_tiles=sensor["dma_issued_tiles"]
         + (dma_issued.astype(jnp.int32) if dma_issued is not None
            else computed * gn),
+        grid_steps=sensor["grid_steps"]
+        + (grid_steps.astype(jnp.float32) if grid_steps is not None
+           else jnp.float32(gm * gk * gn)),
         mode_flag=mode_flag,
         mode_transitions=transitions,
         slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),
@@ -139,6 +151,7 @@ def update_on_basic(
         computed_macs=sensor["computed_macs"] + float(total) * macs_per_tile,
         total_weight_bytes=sensor["total_weight_bytes"] + float(total) * tile_w_bytes,
         dma_issued_tiles=sensor["dma_issued_tiles"] + jnp.int32(total * gn),
+        grid_steps=sensor["grid_steps"] + jnp.float32(total * gn),
         mode_flag=mode_flag,
         mode_transitions=transitions,
         slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),

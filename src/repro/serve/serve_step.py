@@ -37,8 +37,12 @@ def build_reuse_engine(
     are excluded (documented arch-applicability scoping).
 
     `policy` carries per-site tunables (see repro.tune): registration resolves
-    each site's block_k through it, so a tuned table changes the tile
-    granularity the kernels are dispatched with.
+    each site's block_k, exec_path and max_active_k through it, so a tuned
+    table changes both the tile granularity AND the execution substrate
+    (masked kernel vs ragged compacted grid vs gathered compact GEMM) the
+    site is dispatched on — and the host-side `refresh_modes` pass keeps
+    promoting sites onto the compacted tier as their measured skip rate
+    develops.
     """
     eng = ReuseEngine(impl=impl, policy=policy or ReusePolicy())
     nsb = cfg.n_superblocks

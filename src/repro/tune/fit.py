@@ -31,6 +31,8 @@ import dataclasses
 
 from repro.core.policy import (
     DEFAULT_MIN_WORK_FLOPS,
+    RAGGED_BREAK_EVEN_SKIP,
+    ReusePolicy,
     SiteTunables,
 )
 from repro.sensor.cost_model import E_HBM, E_MAC, FLOPS_PER_MAC
@@ -58,6 +60,12 @@ class FitConfig:
     churn_flip_rate: float = 0.10   # transitions/step above this = churny
     min_work_admit_factor: float = 0.5
     min_work_reject_factor: float = 2.0
+    # Measured tile-skip rate above which the compacted execution tier
+    # (ragged grid / gathered GEMM) is fitted instead of the masked walk.
+    ragged_min_skip: float = RAGGED_BREAK_EVEN_SKIP
+    # True fits "ragged" (Pallas compacted-grid kernel — the TPU target);
+    # False fits "compact" (jnp gather — what CPU serving actually runs).
+    pallas_target: bool = False
 
 
 def _per_step_costs(rec: SiteTraceRecord) -> tuple[float, float, float]:
@@ -132,13 +140,33 @@ def fit_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables
 
     flip_rate = rec.mode_transitions / max(rec.steps, 1)
     churny = flip_rate > cfg.churn_flip_rate or rec.suppressed_flips > 0
+
+    # Execution substrate: above the break-even skip rate the compacted tier
+    # converts the measured skip into elided grid steps / a shrunken GEMM.
+    # The shrink scales with gk, so when promoting a site we also cap block_k
+    # at a compactable granularity (gk >= 2); the budget is the measured
+    # occupancy plus headroom (overflow steps fall back at runtime, so a
+    # tight guess costs a fallback, never a wrong answer).
+    block_k = _pick_block_k(rec, g, cfg)
+    exec_path: str | None = None
+    max_active_k: int | None = None
+    if measured_reuse and rec.tile_skip_rate >= cfg.ragged_min_skip:
+        compactable = [c for c in BLOCK_K_CHOICES if 2 * c <= rec.in_features]
+        if compactable:
+            block_k = min(block_k, compactable[-1])
+            gk = -(-rec.in_features // block_k)
+            exec_path = "ragged" if cfg.pallas_target else "compact"
+            max_active_k = ReusePolicy.ragged_budget(gk, rec.tile_skip_rate)
+
     base = SiteTunables()
     return SiteTunables(
         sim_threshold=sim_threshold,
         min_work_flops=min_work,
-        block_k=_pick_block_k(rec, g, cfg),
+        block_k=block_k,
         hysteresis_margin=base.hysteresis_margin * (2.0 if churny else 1.0),
         hysteresis_steps=base.hysteresis_steps * (2 if churny else 1),
+        exec_path=exec_path,
+        max_active_k=max_active_k,
     )
 
 
@@ -155,7 +183,7 @@ def summary_lines(
     lines = [
         f"fitted {len(tunables)} sites from {trace.n_rows} rows "
         f"({trace.path})",
-        f"{'site':24s} {'thr':>6s} {'blk_k':>6s} {'min_work':>10s} "
+        f"{'site':24s} {'thr':>6s} {'blk_k':>6s} {'exec':>8s} {'min_work':>10s} "
         f"{'hit':>5s} {'eff':>5s}  vs default",
     ]
     for name, t in tunables.items():
@@ -165,11 +193,15 @@ def summary_lines(
             diffs.append(f"thr {default.sim_threshold:.2f}->{t.sim_threshold:.2f}")
         if t.block_k != rec.block_k:
             diffs.append(f"block_k {rec.block_k}->{t.block_k}")
+        if t.exec_path is not None:
+            budget = f"@{t.max_active_k}" if t.max_active_k is not None else ""
+            diffs.append(f"exec {rec.exec_path}->{t.exec_path}{budget}")
         if t.min_work_flops != default.min_work_flops:
             diffs.append(f"min_work {default.min_work_flops:.2e}->"
                          f"{t.min_work_flops:.2e}")
         lines.append(
             f"{name:24s} {t.sim_threshold:6.3f} {t.block_k!s:>6s} "
+            f"{t.exec_path or 'auto':>8s} "
             f"{t.min_work_flops:10.3e} {rec.hit_rate:5.2f} "
             f"{rec.harvest_efficiency:5.2f}  {'; '.join(diffs) or 'unchanged'}"
         )
@@ -192,10 +224,15 @@ def main() -> None:
                     default=FitConfig.safety_margin)
     ap.add_argument("--prior-efficiency", type=float,
                     default=FitConfig.prior_efficiency)
+    ap.add_argument("--pallas-target", action="store_true",
+                    help="fit the Pallas compacted-grid path (exec_path="
+                    "'ragged') for high-skip sites instead of the jnp "
+                    "gather path ('compact', the CPU serving default)")
     args = ap.parse_args()
 
     cfg = FitConfig(safety_margin=args.safety_margin,
-                    prior_efficiency=args.prior_efficiency)
+                    prior_efficiency=args.prior_efficiency,
+                    pallas_target=args.pallas_target)
     trace = load_trace(args.trace)
     tunables = fit_trace(trace, cfg)
     print("\n".join(summary_lines(trace, tunables)))

@@ -47,6 +47,11 @@ class SiteTraceRecord:
     suppressed_flips: int
     total_weight_bytes: float
     total_macs: float
+    # Schema-v3 fields: the execution substrate the site ran on and the
+    # measured grid-step walk (dense baseline = total_tiles · gn).
+    exec_path: str = "auto"
+    grid_steps: float = 0.0
+    grid_step_skip_rate: float = 0.0
 
     @property
     def work_flops(self) -> float:
@@ -80,6 +85,11 @@ _REQUIRED_SITE_FIELDS = (
 )
 
 
+# v2 rows lack only fields this loader defaults (grid_steps, exec_path), so
+# they stay loadable; v1 (unversioned) rows lack the geometry and are refused.
+SUPPORTED_SCHEMA_VERSIONS = (2, SENSOR_SCHEMA_VERSION)
+
+
 def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:
     ver = row.get("schema_version")
     if ver is None:
@@ -87,10 +97,10 @@ def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:
             f"{path}:{lineno}: row has no schema_version — trace predates the "
             f"versioned emission; re-record with --sensor-jsonl on this build"
         )
-    if ver != SENSOR_SCHEMA_VERSION:
+    if ver not in SUPPORTED_SCHEMA_VERSIONS:
         raise TraceSchemaError(
-            f"{path}:{lineno}: schema_version {ver} != supported "
-            f"{SENSOR_SCHEMA_VERSION}"
+            f"{path}:{lineno}: schema_version {ver} not in supported "
+            f"{SUPPORTED_SCHEMA_VERSIONS}"
         )
 
 
@@ -126,6 +136,9 @@ def _site_record(row: dict[str, Any], lineno: int, path: str) -> SiteTraceRecord
         suppressed_flips=int(row.get("suppressed_flips", 0)),
         total_weight_bytes=float(row.get("total_weight_bytes", 0.0)),
         total_macs=float(row.get("total_macs", 0.0)),
+        exec_path=str(row.get("exec_path", "auto")),
+        grid_steps=float(row.get("grid_steps", 0.0)),
+        grid_step_skip_rate=float(row.get("grid_step_skip_rate", 0.0)),
     )
 
 

@@ -146,6 +146,121 @@ def test_delta_quant_fused_vs_ref(rng, m, k, bm, bk):
     np.testing.assert_array_equal(np.asarray(msk), np.asarray(msk2))
 
 
+RAGGED_SWEEP = [
+    # (M, K, N, bm, bn, bk, keep, budget)
+    (32, 1024, 256, 8, 128, 128, 0.3, None),   # ragged counts, full extent
+    (32, 1024, 256, 8, 128, 128, 0.3, 4),      # ragged counts, tight budget
+    (16, 512, 128, 8, 128, 128, 0.0, 1),       # all rows skipped
+    (16, 512, 128, 8, 128, 128, 1.0, 2),       # all rows computed (overflow)
+    (24, 384, 128, 8, 128, 128, 0.4, 2),       # non-multiple K via ops pad
+    (20, 300, 130, 8, 128, 128, 0.5, None),    # every dim non-multiple
+]
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk,keep,budget", RAGGED_SWEEP)
+def test_reuse_matmul_ragged_vs_ref(rng, m, k, n, bm, bn, bk, keep, budget):
+    """Compacted-grid kernel == oracle across raggedness, budgets (including
+    the overflow fallback) and the ops padding entry."""
+    delta = jnp.asarray(make_blocky_delta(rng, m, k, bm, bk, keep))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mask = block_zero_mask(delta, bm, bk)
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    out = ops.reuse_matmul_ragged(
+        delta, w, prev, mask, block_m=bm, block_n=bn, block_k=bk,
+        max_active_k=budget, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ragged_all_rows_skipped_passes_prev_through(rng):
+    m, k, n, bm, bk = 16, 512, 128, 8, 128
+    delta = jnp.zeros((m, k), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mask = jnp.zeros((m // bm, k // bk), jnp.int32)
+    out = ops.reuse_matmul_ragged(
+        delta, w, prev, mask, block_m=bm, block_n=128, block_k=bk,
+        max_active_k=1, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(prev))
+
+
+def test_ragged_budget_overflow_falls_back_exactly(rng):
+    """A budget the live counts overflow must not drop contributions — the
+    wrapper re-runs the full k-extent (the budget is a hint, not a
+    correctness contract)."""
+    m, k, n, bm, bk = 8, 512, 128, 8, 128
+    delta = jnp.asarray(make_blocky_delta(rng, m, k, bm, bk, 1.0))  # 4 live
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+    mask = block_zero_mask(delta, bm, bk)
+    assert int(jnp.max(jnp.sum(mask, axis=1))) == 4
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    out = ops.reuse_matmul_ragged(
+        delta, w, prev, mask, block_m=bm, block_n=128, block_k=bk,
+        max_active_k=1, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_ragged_consumes_mask_not_data(rng):
+    """Like the masked kernel: tiles outside the compacted index list
+    contribute nothing even when their delta is dense."""
+    m, k, n, bm, bk = 16, 512, 128, 8, 128
+    delta = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))  # dense!
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    prev = jnp.zeros((m, n), jnp.float32)
+    mask = jnp.zeros((m // bm, k // bk), jnp.int32).at[0, 2].set(1)
+    out = ops.reuse_matmul_ragged(
+        delta, w, prev, mask, block_m=bm, block_n=128, block_k=bk,
+        max_active_k=2, interpret=True,
+    )
+    ref = ops.reuse_matmul_ref(delta, w, prev, mask, bm, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+    assert not np.allclose(np.asarray(out), np.asarray(prev + delta @ w))
+
+
+def test_compact_block_indices_count_zero():
+    from repro.core.delta import compact_block_indices, compact_rows
+
+    idx, count = compact_block_indices(jnp.zeros((6,), jnp.int32))
+    assert int(count) == 0
+    np.testing.assert_array_equal(np.asarray(idx), np.zeros(6, np.int32))
+    # and the row-batched variant keeps per-row zeros independent
+    mask = jnp.asarray([[0, 0, 0], [0, 1, 0]], jnp.int32)
+    idx2, counts = compact_rows(mask)
+    np.testing.assert_array_equal(np.asarray(counts), [0, 1])
+    np.testing.assert_array_equal(np.asarray(idx2[1]), [1, 1, 1])
+
+
+def test_compact_non_multiple_k_via_padding_entry(rng):
+    """K not a block_k multiple goes through the ops padding entry: padded
+    blocks carry zero deltas and inactive mask bits, so values are exact."""
+    m, k, n, bk = 12, 300, 96, 128
+    delta = rng.normal(size=(m, k)).astype(np.float32)
+    delta[:, bk:2 * bk] = 0.0  # middle block dead
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    prev = rng.normal(size=(m, n)).astype(np.float32)
+    kmask = jnp.asarray([1, 0, 1], jnp.int32)  # ceil(300/128) = 3 blocks
+    out = ops.reuse_matmul_compact(
+        jnp.asarray(delta), jnp.asarray(w), jnp.asarray(prev), kmask,
+        block_k=bk,
+    )
+    np.testing.assert_allclose(np.asarray(out), prev + delta @ w,
+                               rtol=1e-4, atol=1e-3)
+    # budgeted + overflow fallback on the same shapes
+    out2 = ops.reuse_matmul_compact(
+        jnp.asarray(delta), jnp.asarray(w), jnp.asarray(prev), kmask,
+        block_k=bk, max_blocks=1,
+    )
+    np.testing.assert_allclose(np.asarray(out2), prev + delta @ w,
+                               rtol=1e-4, atol=1e-3)
+
+
 def test_compact_path_matches_shared_k_ref(rng):
     m, k, n, bk = 48, 1024, 192, 128
     delta = make_blocky_delta(rng, m, k, m, bk, 0.4)  # shared-K blocky

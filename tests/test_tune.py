@@ -59,6 +59,20 @@ def test_trace_loader_rejects_wrong_schema_version(tmp_path):
         load_trace(str(p))
 
 
+def test_trace_loader_accepts_v2_rows(tmp_path):
+    """Schema-v2 traces (no grid_steps/exec_path) predate the compacted tier
+    but carry everything the fitter divides by — they load with defaults."""
+    rows = [json.loads(line) for line in open(SAMPLE_TRACE)]
+    site = dict(next(r for r in rows if r["kind"] == "site"))
+    site["schema_version"] = 2
+    for f in ("grid_steps", "exec_path", "grid_step_skip_rate"):
+        site.pop(f, None)
+    p = tmp_path / "v2.jsonl"
+    p.write_text(json.dumps(site) + "\n")
+    rec = load_trace(str(p)).sites[site["site"]]
+    assert rec.grid_steps == 0.0 and rec.exec_path == "auto"
+
+
 def test_trace_loader_last_row_per_site_wins(tmp_path):
     rows = [json.loads(line) for line in open(SAMPLE_TRACE)]
     site_rows = [r for r in rows if r["kind"] == "site"]
@@ -106,6 +120,35 @@ def test_fit_admits_profitable_small_sites_and_rejects_dead_ones():
 
     t = fit_site(dead)
     assert t.min_work_flops > rec.work_flops
+
+
+def test_fit_selects_compacted_exec_path():
+    """ISSUE-3 acceptance: on a recorded high-skip trace the fitter moves at
+    least one site off the default exec_path, with an occupancy-derived
+    budget; --pallas-target fits the ragged Pallas path instead."""
+    trace = load_trace(SAMPLE_TRACE)
+    table = fit_trace(trace)
+    moved = {n: t for n, t in table.items() if t.exec_path is not None}
+    assert moved, "high-skip trace must promote at least one site"
+    for name, t in moved.items():
+        assert t.exec_path == "compact"   # CPU serving default
+        gk = -(-trace.sites[name].in_features // t.block_k)
+        assert t.max_active_k is not None and 1 <= t.max_active_k <= gk
+        assert gk >= 2                    # compactable granularity enforced
+    ragged = fit_trace(trace, FitConfig(pallas_target=True))
+    assert any(t.exec_path == "ragged" for t in ragged.values())
+
+
+def test_fit_keeps_low_skip_sites_on_default_path():
+    import dataclasses
+
+    from repro.tune import fit_site
+
+    rec = next(iter(load_trace(SAMPLE_TRACE).sites.values()))
+    cold = dataclasses.replace(rec, tile_skip_rate=0.05,
+                               weight_byte_skip_rate=0.05, hit_rate=0.1)
+    t = fit_site(cold)
+    assert t.exec_path is None and t.max_active_k is None
 
 
 # ---------------------------------------------------------------- table layer
