@@ -1,0 +1,47 @@
+"""repro.control — online adaptive control plane for reuse serving.
+
+Where `repro.sensor` measures and `repro.tune` fits offline, this package
+closes the loop LIVE: a host-side :class:`Controller` runs on a background
+cadence inside the serving loop and adapts the reuse policy from the in-cache
+counters directly — no JSONL round trip:
+
+* :mod:`controller` — the cadence driver (`Controller.step(engine, cache)`);
+* :mod:`retune`     — windowed counter deltas → guardrailed tunables moves,
+                      through the SAME harvest model as the offline fitter
+                      (`repro.tune.harvest`);
+* :mod:`budget`     — `max_active_k` adaptation from the measured
+                      `overflow_fallbacks` rate;
+* :mod:`admit`      — learned per-session admission predictor
+                      (replaces the caller-trusted `Request.predicted_sim`);
+* :mod:`report`     — typed decisions + the JSONL decision journal
+                      (audit/replay).
+
+Serving entry point: ``python -m repro.launch.serve ... --control-every N``.
+"""
+
+from repro.control.admit import AdmissionPredictor
+from repro.control.budget import adapt_budget
+from repro.control.controller import ControlConfig, Controller
+from repro.control.report import (
+    CONTROL_JOURNAL_SCHEMA_VERSION,
+    ControlReport,
+    Decision,
+    DecisionJournal,
+    load_journal,
+)
+from repro.control.retune import bounded_tunables, snapshot_entry, window_record
+
+__all__ = [
+    "CONTROL_JOURNAL_SCHEMA_VERSION",
+    "AdmissionPredictor",
+    "ControlConfig",
+    "ControlReport",
+    "Controller",
+    "Decision",
+    "DecisionJournal",
+    "adapt_budget",
+    "bounded_tunables",
+    "load_journal",
+    "snapshot_entry",
+    "window_record",
+]

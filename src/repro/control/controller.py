@@ -1,0 +1,283 @@
+"""Controller — the host-side adaptive control plane for reuse serving.
+
+Closes, on a background cadence INSIDE the serving loop (no JSONL round
+trip), the three feedback loops the offline tooling only closed between
+runs:
+
+1. **online retuner** — per-site `SiteTunables` refit from windowed deltas of
+   the live sensor counters through the same harvest model as
+   `repro.tune.fit`, with guardrails (min-samples floor, bounded step per
+   interval, the engine's existing mode-flip cooldown) so one noisy window
+   can never thrash the policy;
+2. **budget adapter** — `max_active_k` widened/tightened from the measured
+   `overflow_fallbacks` rate vs grid-step savings;
+3. **admission predictor** — the attached :class:`AdmissionPredictor` learns
+   per-session similarity from retirement telemetry; the controller journals
+   its population estimate so admission drift is auditable.
+
+`Controller.step(engine, cache)` returns a :class:`ControlReport`; the caller
+rebuilds its jitted step exactly when `report.changed` (the same contract as
+`ReuseEngine.refresh_modes`, which the controller invokes last so mode/exec
+transitions see the freshly-installed tunables and keep their hysteresis +
+cooldown guardrails). Every move lands in the decision journal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.control.admit import AdmissionPredictor
+from repro.control.budget import adapt_budget
+from repro.control.report import ControlReport, Decision, DecisionJournal
+from repro.control.retune import (
+    bounded_tunables,
+    snapshot_entry,
+    window_record,
+)
+from repro.core.reuse_cache import resolve_exec_path
+from repro.tune.harvest import FitConfig, solve_site
+
+# SiteTunables fields the retuner may move, journaled field-by-field.
+_TUNABLE_FIELDS = (
+    "sim_threshold", "min_work_flops", "block_k",
+    "hysteresis_margin", "hysteresis_steps", "exec_path", "max_active_k",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    # Guardrail: windows with fewer site evaluations than this are ignored
+    # (not enough samples to act on).
+    min_window_steps: int = 4
+    # Guardrail: sim_threshold moves at most this far per interval.
+    max_threshold_step: float = 0.10
+    # Guardrail: min_work may only RISE by this factor per interval (lowering
+    # — admission — applies immediately; see retune module docstring).
+    max_min_work_raise: float = 8.0
+    # Budget adapter: windowed overflow-fallback rate above which the
+    # compacted-path budget widens by one block.
+    widen_fallback_rate: float = 0.10
+    # Budget adapter anti-thrash: tightening needs this many CONSECUTIVE
+    # fallback-free windows (widening is immediate — every overflow forfeits
+    # that step's whole grid saving, while a too-wide budget only walks some
+    # extra steps). Prevents the boundary ping-pong where widen/tighten
+    # alternate and each move costs a jitted-step retrace.
+    tighten_clean_windows: int = 2
+    # Re-entering a budget that previously OVERFLOWED (the floor a widen
+    # recorded) needs this much longer a clean streak — a boundary stream
+    # whose peaks keep tripping the floor resets the streak and never
+    # re-tries the known-bad budget, while a genuinely-calmed stream earns
+    # the retry after a sustained quiet run.
+    tighten_floor_streak: int = 8
+    # Journal an "admit" decision when the predictor's population estimate
+    # moved by at least this much since the last interval.
+    admit_report_eps: float = 0.05
+    # Decision-journal JSONL path (None = in-memory only).
+    journal_path: str | None = None
+    # The shared harvest model's settings (same dataclass the offline fitter
+    # takes — one cost model, one config surface). Its `pallas_target` is
+    # ignored: the controller derives it from engine.impl each step so pins
+    # always match the substrate the engine executes.
+    fit: FitConfig = dataclasses.field(default_factory=FitConfig)
+
+
+class Controller:
+    """Online adaptive control plane. One instance per serving engine."""
+
+    def __init__(
+        self,
+        config: ControlConfig = ControlConfig(),
+        *,
+        admission: AdmissionPredictor | None = None,
+        journal: DecisionJournal | None = None,
+    ):
+        self.config = config
+        self.admission = admission
+        if journal is None and config.journal_path:
+            journal = DecisionJournal(config.journal_path)
+        self.journal = journal
+        self.reports: list[ControlReport] = []
+        self._snaps: dict[str, dict] = {}
+        self._clean_windows: dict[str, int] = {}  # per-site fallback-free run
+        # per-site budget value observed to overflow (set on widen); units
+        # are K-blocks of the block_k the widen happened at
+        self._budget_floor: dict[str, int] = {}
+        self._interval = 0
+        self._last_admit_est: float | None = None
+
+    def step(self, engine, cache: dict[str, Any], *,
+             step: int | None = None) -> ControlReport:
+        """One control interval: harvest window deltas, retune, adapt
+        budgets, refresh modes/exec paths, journal everything."""
+        cfg = self.config
+        self._interval += 1
+        step = self._interval if step is None else step
+        decisions: list[Decision] = []
+        windows: dict[str, int] = {}
+        retrace: dict[str, str] = {}
+        # The solver must fit the substrate family the engine actually
+        # executes: a Pallas engine compacts onto the ragged grid kernel,
+        # jnp onto the gathered GEMM. A config-static pallas_target that
+        # mismatched engine.impl would pin the wrong path — and pins
+        # override decide_exec_path unconditionally.
+        fit_cfg = dataclasses.replace(
+            cfg.fit, pallas_target=(engine.impl != "jnp")
+        )
+
+        for name, spec in list(engine.sites.items()):
+            cur = snapshot_entry(cache[name])
+            if cur is None:
+                continue
+            prev = self._snaps.get(name)
+            if prev is None:
+                self._snaps[name] = cur  # first sight: window starts now
+                continue
+            rec = window_record(
+                name, spec, engine.modes[name],
+                resolve_exec_path(spec, engine.impl), prev, cur,
+            )
+            if rec is None or rec.steps < cfg.min_window_steps:
+                # below the min-samples floor: keep the old snapshot so the
+                # window keeps ACCUMULATING across intervals instead of
+                # being discarded (any cadence eventually clears the floor)
+                continue
+            self._snaps[name] = cur
+            windows[name] = rec.steps
+
+            # -- loop 1: online retune through the shared harvest model
+            current_t = engine.policy.resolve(name)
+            target = solve_site(rec, fit_cfg)
+            bounded, reasons = bounded_tunables(
+                current_t, target,
+                current_block_k=spec.block_k,
+                max_threshold_step=cfg.max_threshold_step,
+                max_min_work_raise=cfg.max_min_work_raise,
+            )
+            if bounded != current_t:
+                spec_changed = engine.apply_tunables(name, bounded)
+                if spec_changed:
+                    retrace[name] = "retune"
+                for f in _TUNABLE_FIELDS:
+                    b, a = getattr(current_t, f), getattr(bounded, f)
+                    if f == "block_k" and b is None:
+                        # a table entry's block_k=None defers to the spec:
+                        # journal against the EFFECTIVE granularity, not the
+                        # sentinel, or every first window logs a phantom move
+                        b = spec.block_k
+                    if b != a:
+                        # a reason's first token is the knob it explains
+                        # ("min_work ..." explains min_work_flops); fields
+                        # without their own reason (hysteresis, the budget
+                        # riding an exec promotion) get the interval blob
+                        why = next(
+                            (r for r in reasons
+                             if f.startswith(r.split(" ", 1)[0])),
+                            "; ".join(reasons) or "refit",
+                        )
+                        decisions.append(Decision(
+                            step=step, site=name, kind="retune", field=f,
+                            before=b, after=a,
+                            reason=f"window {rec.steps} steps, "
+                                   f"hit {rec.hit_rate:.2f}, "
+                                   f"skip {rec.tile_skip_rate:.2f}: {why}",
+                        ))
+
+            # a block_k retune rescales the spec budget (same covered K
+            # extent, new units) — journal it or replaying the journal would
+            # reconstruct a budget covering half the real extent
+            spec_after = engine.sites[name]
+            if (spec_after.max_active_k != spec.max_active_k
+                    and bounded.max_active_k == current_t.max_active_k):
+                decisions.append(Decision(
+                    step=step, site=name, kind="retune", field="max_active_k",
+                    before=spec.max_active_k, after=spec_after.max_active_k,
+                    reason=f"rescaled with block_k {spec.block_k}->"
+                           f"{spec_after.block_k} (same covered K extent)",
+                ))
+
+            # -- loop 2: budget adaptation from measured overflow fallbacks
+            spec = spec_after  # retune may have replaced it
+            if rec.block_k != spec.block_k:
+                # floor units are K-blocks of the old granularity: stale
+                self._budget_floor.pop(name, None)
+            if rec.overflow_fallbacks == 0:
+                self._clean_windows[name] = self._clean_windows.get(name, 0) + 1
+            else:
+                self._clean_windows[name] = 0
+            proposal = adapt_budget(
+                spec, rec,
+                n_layers=engine.stacking.get(name, 0) or 1,
+                widen_fallback_rate=cfg.widen_fallback_rate,
+            )
+            if proposal is not None:
+                new_budget, why = proposal
+                before = spec.max_active_k
+                tightening = before is not None and new_budget < before
+                if tightening:
+                    # anti-thrash: any tighten needs a clean-window streak,
+                    # and re-entering a budget that previously overflowed
+                    # (the recorded floor) needs a much longer one — else a
+                    # boundary stream ping-pongs widen/tighten, paying a
+                    # retrace per move
+                    need = cfg.tighten_clean_windows
+                    floor = self._budget_floor.get(name)
+                    if floor is not None and new_budget <= floor:
+                        need = cfg.tighten_floor_streak
+                    if self._clean_windows[name] < need:
+                        proposal = None
+                if proposal is not None and engine.set_budget(name, new_budget):
+                    retrace[name] = "budget"
+                    if new_budget > (before or 0):
+                        self._budget_floor[name] = before or 0
+                    decisions.append(Decision(
+                        step=step, site=name, kind="budget",
+                        field="max_active_k", before=before,
+                        after=engine.sites[name].max_active_k, reason=why,
+                    ))
+
+        # -- hysteretic mode/exec refresh sees the freshly-installed tunables
+        if windows:
+            modes_before = dict(engine.modes)
+            paths_before = {n: s.exec_path for n, s in engine.sites.items()}
+            for name, what in engine.refresh_modes(cache).items():
+                retrace[name] = what
+                if what.startswith("exec:"):
+                    decisions.append(Decision(
+                        step=step, site=name, kind="exec", field="exec_path",
+                        before=paths_before[name],
+                        after=engine.sites[name].exec_path,
+                        reason="measured skip rate crossed the compaction "
+                               "break-even (refresh_exec_paths)",
+                    ))
+                else:
+                    decisions.append(Decision(
+                        step=step, site=name, kind="mode", field="mode",
+                        before=modes_before[name], after=what,
+                        reason="hysteretic decide_mode on live sim_ema",
+                    ))
+
+        # -- loop 3: admission predictor drift, journaled
+        admission = None
+        if self.admission is not None:
+            admission = self.admission.stats()
+            est = admission["global_est"]
+            last = self._last_admit_est
+            if last is None or abs(est - last) >= cfg.admit_report_eps:
+                if last is not None:
+                    decisions.append(Decision(
+                        step=step, site="", kind="admit", field="global_est",
+                        before=round(last, 4), after=round(est, 4),
+                        reason=f"{admission['observations']} retirements "
+                               f"across {admission['n_sessions']} sessions",
+                    ))
+                self._last_admit_est = est
+
+        report = ControlReport(
+            step=step, interval=self._interval, window_steps=windows,
+            decisions=decisions, retrace=retrace, admission=admission,
+        )
+        self.reports.append(report)
+        if self.journal is not None:
+            self.journal.append(report)
+        return report

@@ -1,0 +1,117 @@
+"""Control-plane decisions: typed records, per-interval reports, JSONL journal.
+
+Every knob the controller moves is recorded as a :class:`Decision` — what
+changed, from what to what, and the measured evidence it acted on — and every
+`Controller.step` emits a :class:`ControlReport` (the interval's windows,
+decisions, and the sites whose jitted step must be rebuilt). The
+:class:`DecisionJournal` appends both to a JSONL file so an adaptive serving
+run can be audited or replayed offline: the journal plus the sensor trace is
+the complete causal record of why the policy is where it is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any
+
+CONTROL_JOURNAL_SCHEMA_VERSION = 1
+
+# Decision kinds: which feedback loop acted.
+#   "retune" — online refit of a SiteTunables knob from windowed counters
+#   "budget" — max_active_k widened/tightened from the overflow-fallback rate
+#   "mode"   — kernelMode flip applied by the hysteretic refresh
+#   "exec"   — execution-substrate flip applied by the hysteretic refresh
+#   "admit"  — admission-predictor population estimate moved
+DECISION_KINDS = ("retune", "budget", "mode", "exec", "admit")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One knob the controller moved, with its evidence."""
+
+    step: int            # serving decode step the interval closed at
+    site: str            # "" for model-level (admission) decisions
+    kind: str
+    field: str           # tunable/spec field that moved (e.g. "sim_threshold")
+    before: Any
+    after: Any
+    reason: str          # measured evidence, human-readable
+
+    def __post_init__(self) -> None:
+        if self.kind not in DECISION_KINDS:
+            raise ValueError(f"kind {self.kind!r} not in {DECISION_KINDS}")
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ControlReport:
+    """What one controller interval saw and did."""
+
+    step: int                       # decode step the interval closed at
+    interval: int                   # 1-based controller invocation count
+    window_steps: dict[str, int]    # per-site evaluations in this window
+    decisions: list[Decision]
+    # sites whose spec/mode changed this interval — the jitted serve step
+    # must be rebuilt exactly when this is non-empty
+    retrace: dict[str, str]
+    admission: dict[str, Any] | None = None  # predictor snapshot, if attached
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.retrace)
+
+    def summary_lines(self) -> list[str]:
+        lines = [
+            f"ControlReport step={self.step} interval={self.interval} "
+            f"windows={len(self.window_steps)} decisions={len(self.decisions)} "
+            f"retrace={sorted(self.retrace) or '-'}"
+        ]
+        for d in self.decisions:
+            lines.append(
+                f"  {d.kind:6s} {d.site or '<model>':24s} "
+                f"{d.field}: {d.before} -> {d.after}  ({d.reason})"
+            )
+        return lines
+
+    def to_dicts(self) -> list[dict[str, Any]]:
+        """JSONL rows: one interval row + one row per decision."""
+        ver = {"schema_version": CONTROL_JOURNAL_SCHEMA_VERSION}
+        ts = time.time()
+        rows = [dict(
+            kind="interval", step=self.step, interval=self.interval,
+            window_steps=self.window_steps, n_decisions=len(self.decisions),
+            retrace=self.retrace, admission=self.admission, ts=ts, **ver,
+        )]
+        rows += [dict(d.to_dict(), kind="decision", decision_kind=d.kind,
+                      interval=self.interval, ts=ts, **ver)
+                 for d in self.decisions]
+        return rows
+
+
+class DecisionJournal:
+    """Append-only JSONL audit log of controller activity."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.rows_written = 0
+
+    def append(self, report: ControlReport) -> None:
+        with open(self.path, "a") as f:
+            for row in report.to_dicts():
+                f.write(json.dumps(row) + "\n")
+                self.rows_written += 1
+
+
+def load_journal(path: str) -> list[dict[str, Any]]:
+    """Parse a decision journal back into rows (audit/replay)."""
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows

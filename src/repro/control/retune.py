@@ -1,0 +1,207 @@
+"""Online retuner — windowed counter deltas → guardrailed SiteTunables moves.
+
+The offline loop (record JSONL → `repro.tune.fit` → reload) and this online
+path share ONE harvest model: both build a
+:class:`~repro.tune.trace.SiteTraceRecord` describing a measured operating
+point and hand it to :func:`repro.tune.harvest.solve_site`. The difference is
+purely the guardrails: an offline fit can jump straight to the solved target
+(a human reviews the table), while the live retuner moves the installed
+tunables a BOUNDED step toward the target each interval, so one noisy window
+can never teleport the policy — and the hysteresis/cooldown machinery in
+`ReuseEngine.refresh_modes` still owns the actual mode/exec transitions.
+
+Guardrail asymmetry, deliberate: knobs that *restrict* harvesting
+(sim_threshold moves, min_work raises) are throttled per interval, because a
+wrongly-restricted site stops producing the very measurements that would
+correct the mistake. Knobs that *admit* a site whose measured window is
+net-positive (min_work lowering) apply immediately — the measurement already
+justifies them, and a mis-admission keeps measuring and self-corrects the
+next window (throttled back out, with the flip cooldown absorbing the churn).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policy import SiteTunables
+from repro.tune.harvest import BLOCK_K_CHOICES
+from repro.tune.trace import SiteTraceRecord
+
+
+def snapshot_entry(entry: dict) -> dict | None:
+    """Host-side snapshot of one cache entry's cumulative counters, summed
+    over any leading layer dimension (one small device→host transfer)."""
+    sensor = entry.get("sensor")
+    if sensor is None:
+        return None
+
+    def total(key: str) -> float:
+        return float(np.sum(np.asarray(sensor[key])))
+
+    snap = {
+        k: total(k)
+        for k in (
+            "skipped_tiles", "computed_tiles", "skipped_macs", "computed_macs",
+            "skipped_weight_bytes", "total_weight_bytes", "grid_steps",
+            "mode_transitions",
+        )
+    }
+    snap["overflow_fallbacks"] = (
+        total("overflow_fallbacks") if "overflow_fallbacks" in sensor else 0.0
+    )
+    # suppression is a site-level event bumped on every layer slice at once
+    snap["suppressed_flips"] = float(np.max(np.asarray(sensor["suppressed_flips"])))
+    hit = np.asarray(sensor["slot_hit_sum"], np.float64)
+    ss = np.asarray(sensor["slot_steps"], np.float64)
+    if hit.ndim > 1:  # stacked site: sum the layer dimension, keep lanes
+        hit = hit.sum(axis=tuple(range(hit.ndim - 1)))
+        ss = ss.sum(axis=tuple(range(ss.ndim - 1)))
+    snap["slot_hit_sum"] = hit
+    snap["slot_steps"] = ss
+    snap["steps"] = float(np.max(np.asarray(entry["steps"])))
+    return snap
+
+
+def window_record(
+    name: str,
+    spec,
+    mode: str,
+    exec_path: str,
+    prev: dict,
+    cur: dict,
+) -> SiteTraceRecord | None:
+    """The window's measured operating point as a solver-ready trace record
+    (counter deltas between two snapshots), or None for an empty window.
+
+    Recycled lanes are filtered best-effort: a legitimate lane delta always
+    satisfies 0 <= d_hit <= d_steps (each evaluation adds one step and a
+    [0, 1] similarity), so lanes whose accumulators went backwards OR
+    out-accumulated their step delta (reset_slot zeroed them mid-window and
+    a new occupant overran the old sums) drop out of the window's hit rate
+    rather than poisoning it with cross-session or >1 values."""
+    d = {k: cur[k] - prev[k] for k in cur if not isinstance(cur[k], np.ndarray)}
+    steps = int(round(d["steps"]))
+    if steps <= 0:
+        return None
+    skipped = d["skipped_tiles"]
+    total_tiles = skipped + d["computed_tiles"]
+    total_macs = d["skipped_macs"] + d["computed_macs"]
+    d_hit = cur["slot_hit_sum"] - prev["slot_hit_sum"]
+    d_ss = cur["slot_steps"] - prev["slot_steps"]
+    active = (d_ss > 0) & (d_hit >= 0.0) & (d_hit <= d_ss)
+    hit = float(np.mean(d_hit[active] / d_ss[active])) if active.any() else 0.0
+    gn = -(-spec.out_features // spec.block_n)
+    dense_grid = total_tiles * gn
+    return SiteTraceRecord(
+        site=name,
+        mode=mode,
+        steps=steps,
+        batch=int(cur["slot_steps"].shape[-1]),
+        in_features=spec.in_features,
+        out_features=spec.out_features,
+        block_m=spec.block_m,
+        block_k=spec.block_k,
+        block_n=spec.block_n,
+        tile_skip_rate=skipped / max(total_tiles, 1.0),
+        mac_skip_rate=d["skipped_macs"] / max(total_macs, 1e-9),
+        weight_byte_skip_rate=(
+            d["skipped_weight_bytes"] / max(d["total_weight_bytes"], 1e-9)
+        ),
+        hit_rate=hit,
+        mode_transitions=int(round(d["mode_transitions"])),
+        suppressed_flips=int(round(d["suppressed_flips"])),
+        total_weight_bytes=d["total_weight_bytes"],
+        total_macs=total_macs,
+        exec_path=exec_path,
+        grid_steps=d["grid_steps"],
+        grid_step_skip_rate=max(0.0, 1.0 - d["grid_steps"] / max(dense_grid, 1e-9)),
+        overflow_fallbacks=int(round(d["overflow_fallbacks"])),
+    )
+
+
+def _step_block_k(current: int, target: int) -> int:
+    """block_k moves at most one BLOCK_K_CHOICES notch per interval. Each
+    move retraces the step, and subsequent tile counts accrue at the new
+    granularity — CUMULATIVE tile rates therefore mix units across a move
+    (the windowed deltas this retuner feeds the solver stay clean, and exec
+    promotion under the controller rides the solver's pin rather than the
+    cumulative signal, so only the unpinned `refresh_exec_paths` fallback
+    sees the smeared rate)."""
+    if target == current:
+        return current
+    choices = sorted(set(BLOCK_K_CHOICES) | {current, target})
+    i = choices.index(current)
+    j = choices.index(target)
+    return choices[i + 1] if j > i else choices[i - 1]
+
+
+def bounded_tunables(
+    current: SiteTunables,
+    target: SiteTunables,
+    *,
+    current_block_k: int,
+    max_threshold_step: float,
+    max_min_work_raise: float,
+) -> tuple[SiteTunables, list[str]]:
+    """Clamp one interval's move from `current` toward the solved `target`.
+
+    Returns the tunables to install plus human-readable reasons for each
+    field that moved. `current_block_k` is the spec's resolved granularity
+    (the table entry may carry block_k=None)."""
+    reasons: list[str] = []
+
+    thr = target.sim_threshold
+    lo = current.sim_threshold - max_threshold_step
+    hi = current.sim_threshold + max_threshold_step
+    thr = min(max(thr, lo), hi)
+    if abs(thr - current.sim_threshold) > 1e-9:
+        reasons.append(f"sim_threshold {current.sim_threshold:.3f}->{thr:.3f} "
+                       f"(target {target.sim_threshold:.3f})")
+
+    mw = target.min_work_flops
+    if mw > current.min_work_flops:  # restricting: throttled
+        mw = min(mw, current.min_work_flops * max_min_work_raise)
+    if abs(mw - current.min_work_flops) > 1e-9:
+        reasons.append(f"min_work {current.min_work_flops:.3e}->{mw:.3e}")
+
+    tgt_bk = target.block_k if target.block_k is not None else current_block_k
+    bk = _step_block_k(current_block_k, int(tgt_bk))
+    if bk != current_block_k:
+        reasons.append(f"block_k {current_block_k}->{bk} (target {tgt_bk})")
+
+    # Exec promotion only once the granularity it was solved at is reached —
+    # a pinned compacted path at an uncompactable block_k would just thrash.
+    # Two deliberate asymmetries: (a) a below-break-even window RELEASES the
+    # pin (exec_path=None) rather than pinning a demotion: an un-pinned site
+    # falls back to `refresh_exec_paths`, which demotes from CUMULATIVE
+    # counters under the flip cooldown — a pin the retuner never released
+    # would make that demotion unreachable, since decide_exec_path honors
+    # pins unconditionally; (b) the budget of a site already on the target
+    # path belongs to the budget adapter (measured fallback rate) —
+    # re-solving it every window would fight the adapter's moves (the SPEC
+    # keeps its adapted budget across a pin release; only the table clears).
+    exec_path = current.exec_path
+    mak = current.max_active_k
+    if (bk == tgt_bk and target.exec_path is not None
+            and target.exec_path != current.exec_path):
+        exec_path = target.exec_path
+        mak = target.max_active_k
+        reasons.append(f"exec_path {current.exec_path}->{exec_path}"
+                       + (f"@{mak}" if mak is not None else ""))
+    elif target.exec_path is None and current.exec_path is not None:
+        exec_path = None
+        mak = None
+        reasons.append(f"exec_path pin {current.exec_path} released (window "
+                       "below compaction break-even); demotion decided by "
+                       "the cumulative refresh")
+
+    out = SiteTunables(
+        sim_threshold=thr,
+        min_work_flops=mw,
+        block_k=bk,
+        hysteresis_margin=target.hysteresis_margin,
+        hysteresis_steps=target.hysteresis_steps,
+        exec_path=exec_path,
+        max_active_k=mak,
+    )
+    return out, reasons

@@ -22,9 +22,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import ReusePolicy
+from repro.core.policy import ReusePolicy, SiteTunables
 from repro.core.reuse_cache import ReuseSiteSpec, init_site_cache
 from repro.core.reuse_linear import ReuseStats, reuse_linear
+from repro.kernels.ops import clamp_budget
 
 
 @dataclasses.dataclass
@@ -104,6 +105,69 @@ class ReuseEngine:
             x, w, b, cache_entry, spec, mode=self.modes[name], impl=self.impl
         )
 
+    def apply_tunables(self, name: str, t: SiteTunables) -> bool:
+        """Install live per-site tunables — the online retuner's write path.
+
+        The policy-table entry is replaced (decide_mode and the refresh
+        passes pick the new knobs up immediately); spec fields baked into the
+        traced dispatch re-resolve here: block_k, and — for a site already ON
+        a compacted path — its k-extent budget. Mode and exec-path
+        *transitions* stay with `refresh_modes`, which carries the hysteresis
+        margin and the flip cooldown. Returns True when the spec changed, so
+        callers rebuild the jitted step."""
+        self.policy.site_tunables[name] = t
+        spec = self.sites[name]
+        new = spec
+        if t.block_k is not None and int(t.block_k) != spec.block_k:
+            new = dataclasses.replace(new, block_k=int(t.block_k))
+            if new.exec_path in ("ragged", "compact") and new.max_active_k:
+                # the budget's unit is K-blocks OF block_k: rescale it so the
+                # covered K extent survives the granularity change (else a
+                # halved block_k silently halves the budgeted extent and
+                # every evaluation overflows into the full-extent fallback).
+                # The table entry syncs to the rescaled value too, so the
+                # next retune interval can't re-install the old-unit number.
+                gk = -(-new.in_features // new.block_k)
+                scaled = round(new.max_active_k * spec.block_k / new.block_k)
+                new = dataclasses.replace(
+                    new, max_active_k=clamp_budget(int(scaled), gk)
+                )
+                self.policy.site_tunables[name] = dataclasses.replace(
+                    t, max_active_k=new.max_active_k
+                )
+        if (
+            t.max_active_k is not None
+            and new.exec_path in ("ragged", "compact")
+            and spec.block_k == new.block_k  # rescale wins on a block_k move
+            and int(t.max_active_k) != new.max_active_k
+        ):
+            gk = -(-new.in_features // new.block_k)
+            new = dataclasses.replace(
+                new, max_active_k=clamp_budget(int(t.max_active_k), gk)
+            )
+        if new == spec:
+            return False
+        self.sites[name] = new
+        return True
+
+    def set_budget(self, name: str, budget: int) -> bool:
+        """Re-point a compacted site's static k-extent budget — the online
+        budget adapter's write path. Keeps the policy table in sync so the
+        next exec-path refresh or retune doesn't silently revert the
+        adaptation. Returns True when the spec changed (retrace)."""
+        spec = self.sites[name]
+        if spec.exec_path not in ("ragged", "compact"):
+            return False
+        gk = -(-spec.in_features // spec.block_k)
+        budget = clamp_budget(int(budget), gk)
+        if budget == spec.max_active_k:
+            return False
+        self.sites[name] = dataclasses.replace(spec, max_active_k=budget)
+        self.policy.site_tunables[name] = dataclasses.replace(
+            self.policy.resolve(name), max_active_k=budget
+        )
+        return True
+
     def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
         """Host-side policy pass: read sim_ema out of the cache, re-decide
         kernelMode per site (hysteretically — the policy sees the current
@@ -144,8 +208,13 @@ class ReuseEngine:
         Cumulative tile counters smooth the signal, and exec flips share the
         mode-flip cooldown (each one retraces the step, so a site frozen
         after any flip stays frozen here too); a site with no measured reuse
-        evaluations keeps its current path. Returns {site: "exec:<path>"}
-        for sites that moved."""
+        evaluations keeps its current path. Caveat: after a live block_k
+        change (apply_tunables) the cumulative rate mixes tile units across
+        granularities and converges to the new regime only asymptotically —
+        the online controller therefore drives promotion through solver
+        pins computed from clean windowed deltas, and this pass is the
+        fallback for unpinned sites. Returns {site: "exec:<path>"} for
+        sites that moved."""
         from repro.core.reuse_cache import resolve_exec_path
 
         changed: dict[str, str] = {}

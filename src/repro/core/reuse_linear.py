@@ -123,6 +123,7 @@ def reuse_linear(
         sel = None
         dma_issued = None
         grid_steps = None
+        overflow = None
         if path == "dense":
             out = ops.reuse_matmul_ref(
                 enc.delta, w, cache["prev_out"], enc.block_mask,
@@ -141,6 +142,9 @@ def reuse_linear(
                 jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
                 gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
             )
+            overflow = ops.budget_overflow(
+                jnp.sum(k_mask), gk=gk, max_active_k=spec.max_active_k
+            )
         elif path == "ragged":
             idx, counts = ops.compact_rows(enc.block_mask)
             out = ops.reuse_matmul_ragged(
@@ -152,6 +156,9 @@ def reuse_linear(
             dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
             grid_steps = ops.ragged_grid_steps(
                 counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+            )
+            overflow = ops.budget_overflow(
+                counts, gk=gk, max_active_k=spec.max_active_k
             )
         elif path == "kernel":
             sel = ops.skip_sel(enc.block_mask)
@@ -186,6 +193,7 @@ def reuse_linear(
                 w_itemsize=w.dtype.itemsize,
                 dma_issued=dma_issued,
                 grid_steps=grid_steps,
+                overflow=overflow,
             )
         stats = ReuseStats(similarity=sim, skip_fraction=enc.skip_fraction)
     else:

@@ -48,12 +48,14 @@ __all__ = [
     "weight_dma_tiles",
     "ragged_dma_tiles",
     "ragged_grid_steps",
+    "budget_overflow",
+    "clamp_budget",
     "skip_sel",
     "compact_rows",
 ]
 
 
-def _clamp_budget(max_active_k: int | None, gk: int) -> int:
+def clamp_budget(max_active_k: int | None, gk: int) -> int:
     """Static k-extent budget, clamped to [1, gk]. ONE definition shared by
     the executing wrappers and the grid-step accounting — the sensor's
     grid_steps counter is only honest while both see the same extent."""
@@ -152,7 +154,7 @@ def reuse_matmul_ragged(
         idx, counts = compact_rows(block_mask)
     else:
         idx, counts = compacted
-    kb = _clamp_budget(max_active_k, gk)
+    kb = clamp_budget(max_active_k, gk)
 
     def run(n_k: int) -> jax.Array:
         return _reuse_matmul_ragged_kernel(
@@ -190,12 +192,27 @@ def ragged_grid_steps(
     the wrapper re-runs the full gm·gn·gk extent, and the accounting must say
     so — saved steps are counted like saved DMAs: only when truly elided.
     """
-    kb = _clamp_budget(max_active_k, gk)
+    kb = clamp_budget(max_active_k, gk)
     if kb >= gk:
         return jnp.asarray(gm * gn * gk, jnp.float32)
     return jnp.where(
         jnp.any(counts > kb), float(gm * gn * gk), float(gm * gn * kb)
     )
+
+
+def budget_overflow(
+    counts: jax.Array, *, gk: int, max_active_k: int | None
+) -> jax.Array:
+    """1 when an evaluation's live tile counts overflow the static budget —
+    i.e. the compacted wrappers' `lax.cond` took the full-extent fallback —
+    else 0. `counts` is the ragged per-row count vector or the compact path's
+    scalar live-block count. Shares `clamp_budget` with the executing
+    wrappers, so the sensor's `overflow_fallbacks` counter can only disagree
+    with the branch actually taken if the wrappers themselves change."""
+    kb = clamp_budget(max_active_k, gk)
+    if kb >= gk:
+        return jnp.zeros((), jnp.int32)
+    return jnp.any(counts > kb).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "max_blocks"))
@@ -255,7 +272,7 @@ def reuse_matmul_compact(
     gk = delta.shape[1] // block_k
     assert k_block_mask.shape == (gk,), (k_block_mask.shape, gk)
     prev_out = prev_out.astype(jnp.float32)
-    nb = _clamp_budget(max_blocks, gk)
+    nb = clamp_budget(max_blocks, gk)
 
     def run(n_blocks: int) -> jax.Array:
         return _compact_gemm(delta, w, prev_out, k_block_mask,

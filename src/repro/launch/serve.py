@@ -49,16 +49,35 @@ def main() -> None:
                     "tunables and reports tuned-vs-default mode deltas")
     ap.add_argument("--refresh-every", type=int, default=0,
                     help="re-run the host-side mode policy every N decode "
-                    "steps (0 = keep registration-time modes)")
+                    "steps (0 = keep registration-time modes); superseded "
+                    "by --control-every, which runs the full adaptive "
+                    "control plane at that cadence instead")
     ap.add_argument("--affinity", action="store_true",
                     help="place requests on slots by predicted stream "
                     "similarity (per-slot sim_ema affinity) instead of "
                     "first-free")
+    ap.add_argument("--control-every", type=int, default=0,
+                    help="run the online control plane (repro.control) every "
+                    "N decode steps: live per-site retuning, overflow-driven "
+                    "max_active_k budget adaptation, and learned per-session "
+                    "admission (replaces the synthetic predicted_sim). "
+                    "Subsumes --refresh-every (the controller invokes the "
+                    "mode refresh itself).")
+    ap.add_argument("--control-journal", default=None,
+                    help="append the controller's decision journal (JSONL) "
+                    "to this path for audit/replay")
     args = ap.parse_args()
 
-    for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity"):
+    for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity",
+                 "control_every", "control_journal"):
         if getattr(args, flag) and not args.reuse:
             ap.error(f"--{flag.replace('_', '-')} requires --reuse")
+    if args.control_journal and not args.control_every:
+        ap.error("--control-journal requires --control-every")
+    if args.control_every and args.refresh_every:
+        print("--control-every supersedes --refresh-every "
+              "(the controller runs the mode refresh itself)")
+        args.refresh_every = 0
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -125,12 +144,30 @@ def main() -> None:
 
     sstate = {"state": state, "rcache": rcache}
 
+    # Learned admission + online control plane (repro.control): the predictor
+    # learns per-session similarity from retirement telemetry, the controller
+    # retunes the policy / adapts budgets from live counters on a cadence.
+    predictor = None
+    controller = None
+    if args.control_every > 0:
+        from repro.control import AdmissionPredictor, ControlConfig, Controller
+
+        predictor = AdmissionPredictor()
+        controller = Controller(
+            ControlConfig(journal_path=args.control_journal),
+            admission=predictor,
+        )
+
     def prefill_fn(prompt, slot):
         nonlocal sstate
         full = jnp.zeros((args.batch_slots, prompt.shape[1]), jnp.int32)
         full = full.at[slot].set(jnp.asarray(prompt[0]))
         logits, new_state = jit_prefill(params, full, sstate["state"])
-        # only this slot's lanes changed meaningfully; adopt the new caches
+        # only this slot's lanes changed meaningfully; adopt the new caches.
+        # No admission= here: the scheduler's on_place hook has ALREADY bound
+        # the slot to the incoming session (admission order: pick slot ->
+        # on_place -> prefill), and the retirement-path reset below is where
+        # the departing occupant's predictor state gets cleared.
         sstate["state"] = new_state
         sstate["rcache"] = reset_slot(sstate["rcache"], slot)
         return int(greedy_sample(logits[slot: slot + 1, -1:])[0, 0])
@@ -155,14 +192,21 @@ def main() -> None:
 
         def on_retire(req):
             t = req.telemetry
-            lane_sim[req.slot] = t["hit_rate"]
+            if predictor is None:
+                # lane store for the synthetic --affinity path only; with
+                # the control plane, predictor.lane_character is THE store
+                lane_sim[req.slot] = t["hit_rate"]
+            else:
+                # learn BEFORE the reset clears the slot binding
+                predictor.observe_retirement(req)
             print(f"SensorReport rid={req.rid} slot={t['slot']} "
                   f"steps={t['steps']} hit_rate={t['hit_rate']:.3f} "
                   f"sites={t['n_sites']}")
             # Reset the freed lane now (telemetry is already snapshotted):
             # bounds how much idle-slot decode history leaks into the
             # end-of-run report before the next admission resets again.
-            sstate["rcache"] = reset_slot(sstate["rcache"], req.slot)
+            sstate["rcache"] = reset_slot(sstate["rcache"], req.slot,
+                                          admission=predictor)
 
     slot_sim_fn = None
     on_step = None
@@ -186,6 +230,25 @@ def main() -> None:
                     decode_jit = jit_decode_factory()
                     print(f"policy refresh @step {step_idx}: {changed}")
 
+    predict_sim_fn = None
+    on_place = None
+    if controller is not None:
+        # learned admission supplies predictions + lane affinity; per-slot
+        # predictor state is cleared on recycle by reset_slot(admission=...)
+        predict_sim_fn = predictor.predict
+        slot_sim_fn = predictor.slot_affinity
+        on_place = predictor.on_placed
+
+        def on_step(step_idx):
+            nonlocal decode_jit
+            if step_idx % args.control_every == 0:
+                rep = controller.step(engine, sstate["rcache"], step=step_idx)
+                if rep.decisions:
+                    print("\n".join(rep.summary_lines()))
+                if rep.changed:
+                    # live spec/mode changes are baked into the traced step
+                    decode_jit = jit_decode_factory()
+
     batcher = ContinuousBatcher(
         batch_slots=args.batch_slots,
         prefill_fn=prefill_fn,
@@ -195,15 +258,23 @@ def main() -> None:
         on_retire=on_retire,
         slot_sim_fn=slot_sim_fn,
         on_step=on_step,
+        predict_sim_fn=predict_sim_fn,
+        on_place=on_place,
     )
     for i in range(args.requests):
         batcher.submit(Request(
             rid=i,
             prompt=rng.integers(0, cfg.vocab, size=(args.prompt_len,), dtype=np.int32),
             max_new_tokens=args.max_new,
-            # Stand-in for a session-level similarity predictor: synthetic
+            # Without the control plane, a synthetic stand-in predictor:
             # traffic alternates sticky-looking and one-shot-looking streams.
-            predicted_sim=(0.8 if i % 2 == 0 else 0.2) if args.affinity else None,
+            # With it, predictions come from the LEARNED per-session
+            # estimator (predict_sim_fn) instead of being caller-trusted.
+            predicted_sim=(0.8 if i % 2 == 0 else 0.2)
+            if (args.affinity and controller is None) else None,
+            # two synthetic session classes so the predictor has sessions
+            # to learn: even rids are the "sticky" session, odd the one-shot
+            session=f"sess-{i % 2}" if controller is not None else None,
         ))
 
     t0 = time.time()
@@ -217,6 +288,13 @@ def main() -> None:
         if args.sensor_jsonl:
             report.write_jsonl(args.sensor_jsonl)
             print(f"sensor report appended to {args.sensor_jsonl}")
+    if controller is not None:
+        n_dec = sum(len(r.decisions) for r in controller.reports)
+        print(f"control plane: {len(controller.reports)} intervals, "
+              f"{n_dec} decisions, admission {predictor.stats()}")
+        if controller.journal is not None:
+            print(f"decision journal: {controller.journal.rows_written} rows "
+                  f"-> {controller.journal.path}")
     assert len(done) == args.requests
 
 

@@ -29,7 +29,10 @@ import numpy as np
 #       (in_features/out_features/block_m/block_k/block_n) on site/layer rows
 #   3 — adds grid_steps (measured grid-step counter; dense baseline is
 #       total_tiles · gn) and exec_path on site/layer rows
-SENSOR_SCHEMA_VERSION = 3
+#   4 — adds overflow_fallbacks (evaluations whose live tile count overflowed
+#       the compacted-path budget and took the full-extent fallback); v3
+#       traces still load with the field defaulted to 0
+SENSOR_SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass
@@ -55,6 +58,10 @@ class SiteSensor:
     # Measured grid steps (k-tile visits × n panels); the dense baseline is
     # total_tiles · gn. Only the compacted tiers (ragged/compact) shrink it.
     grid_steps: float = 0.0
+    # Evaluations whose live tile count overflowed the compacted-path budget
+    # (max_active_k) and fell back to the full extent — the online budget
+    # adapter's feedback signal.
+    overflow_fallbacks: int = 0
     # Execution substrate the site is currently dispatched on.
     exec_path: str = "auto"
     # Site geometry — what the tune fitter needs to model bookkeeping cost
@@ -152,7 +159,7 @@ class SensorReport:
                 f"mac_skip={s.mac_skip_rate:6.1%} "
                 f"grid_skip={s.grid_step_skip_rate:6.1%} "
                 f"hit={s.hit_rate:.3f} transitions={s.mode_transitions} "
-                f"suppressed={s.suppressed_flips}"
+                f"suppressed={s.suppressed_flips} ovf={s.overflow_fallbacks}"
             )
         return lines
 
@@ -210,6 +217,8 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None,
             if "suppressed_flips" in sensor else 0,
             grid_steps=float(leaf("grid_steps", layer))
             if "grid_steps" in sensor else 0.0,
+            overflow_fallbacks=int(leaf("overflow_fallbacks", layer))
+            if "overflow_fallbacks" in sensor else 0,
             exec_path=resolve_exec_path(spec, impl) if spec else "auto",
             in_features=spec.in_features if spec else 0,
             out_features=spec.out_features if spec else 0,
@@ -243,6 +252,8 @@ def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
         # once, so max (not sum) recovers the event count
         suppressed_flips=max(r.suppressed_flips for r in rows),
         grid_steps=sum(r.grid_steps for r in rows),
+        # each layer slice's evaluation falls back independently
+        overflow_fallbacks=sum(r.overflow_fallbacks for r in rows),
         exec_path=rows[0].exec_path,
         in_features=rows[0].in_features,
         out_features=rows[0].out_features,
@@ -272,7 +283,7 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         for k in ("skipped_tiles", "computed_tiles", "skipped_macs",
                   "computed_macs", "skipped_weight_bytes", "total_weight_bytes",
                   "reused_out_elems", "mode_transitions", "suppressed_flips",
-                  "grid_steps")
+                  "grid_steps", "overflow_fallbacks")
     }
     total_tiles = tot["skipped_tiles"] + tot["computed_tiles"]
     total_macs = tot["skipped_macs"] + tot["computed_macs"]

@@ -50,6 +50,11 @@ def init_site_counters(batch: int) -> dict[str, jax.Array]:
         # this — the masked kernel visits every tile; saved steps are
         # accounted like saved DMAs (only when truly elided).
         "grid_steps": jnp.zeros((), jnp.float32),
+        # Evaluations whose live tile count overflowed the compacted-path
+        # budget (max_active_k) and took the full-extent lax.cond fallback.
+        # The online budget adapter widens/tightens max_active_k from the
+        # windowed rate of this counter vs the grid-step savings.
+        "overflow_fallbacks": jnp.zeros((), jnp.int32),
         # kernelMode tracking: -1 = never evaluated, 0 = basic, 1 = reuse.
         "mode_flag": jnp.full((), -1, jnp.int32),
         "mode_transitions": jnp.zeros((), jnp.int32),
@@ -82,6 +87,7 @@ def update_on_reuse(
     w_itemsize: int,
     dma_issued: jax.Array | None = None,  # measured DMA count (kernel semantics)
     grid_steps: jax.Array | None = None,  # measured grid steps (ragged paths)
+    overflow: jax.Array | None = None,    # budget-overflow fallback this call
 ) -> dict[str, jax.Array]:
     """Account one reuse-mode evaluation from its tile mask.
 
@@ -100,6 +106,13 @@ def update_on_reuse(
     # through untouched: block_m · N output elements fully reused.
     rows_all_skipped = jnp.sum(jnp.all(block_mask == 0, axis=1)).astype(jnp.float32)
     mode_flag, transitions = _mode_bookkeeping(sensor, 1)
+    overflow_fallbacks = sensor.get("overflow_fallbacks")  # legacy caches: absent
+    if overflow_fallbacks is not None and overflow is not None:
+        overflow_fallbacks = overflow_fallbacks + overflow.astype(jnp.int32)
+    extra = (
+        {} if overflow_fallbacks is None
+        else {"overflow_fallbacks": overflow_fallbacks}
+    )
     return dict(
         sensor,
         skipped_tiles=sensor["skipped_tiles"] + skipped,
@@ -122,6 +135,7 @@ def update_on_reuse(
         mode_transitions=transitions,
         slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),
         slot_steps=sensor["slot_steps"] + 1,
+        **extra,
     )
 
 

@@ -71,6 +71,8 @@ def run_measured_decode(
     reduced: bool = True,
     refresh_policy: bool = False,
     policy=None,
+    on_step=None,
+    burst: tuple[int, int] | None = None,
 ) -> MeasuredDecode:
     """Decode `steps` tokens on a (reduced) arch and harvest sensor counters.
 
@@ -82,6 +84,15 @@ def run_measured_decode(
 
     `policy` (a ReusePolicy, e.g. from repro.tune.load_tuned_policy) replaces
     the default global-constant policy — the tuned-vs-default benchmark knob.
+
+    `on_step(step_idx, engine, reuse_cache)` runs host-side after each decode
+    step (1-based) — the hook the online control plane (`repro.control`)
+    rides in tests and examples; it may mutate the engine's policy/specs and
+    the cache's sensor counters in place.
+
+    `burst=(a, b)` feeds uniform-random tokens for steps a..b (1-based,
+    inclusive) instead of the correlated stream — a dissimilarity burst that
+    spikes tile occupancy, the adversarial input for budget-adaptation tests.
     """
     cfg = ARCHS[arch]
     if reduced:
@@ -94,13 +105,24 @@ def run_measured_decode(
 
     anchor = rng.integers(0, cfg.vocab, (batch, 1)).astype(np.int32)
     tok = jax.numpy.asarray(anchor)
-    for _ in range(steps):
+    if burst is not None and burst[0] <= 1 <= burst[1]:
+        # a burst covering step 1 must randomize the pre-loop token too
+        tok = jax.numpy.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1)).astype(np.int32))
+    for i in range(steps):
         logits, state, rcache = decode_step(
             params, cfg, tok, state, engine=engine, reuse_cache=rcache
         )
         if refresh_policy:
             engine.refresh_modes(rcache)
+        if on_step is not None:
+            on_step(i + 1, engine, rcache)
         nxt = np.asarray(greedy_sample(logits))[:, :1]
+        if burst is not None and burst[0] <= i + 2 <= burst[1]:
+            # the NEXT step (i+2, 1-based) decodes inside the burst
+            tok = jax.numpy.asarray(
+                rng.integers(0, cfg.vocab, (batch, 1)).astype(np.int32))
+            continue
         keep = rng.random((batch, 1)) < correlation
         tok = jax.numpy.asarray(np.where(keep, anchor, nxt).astype(np.int32))
 

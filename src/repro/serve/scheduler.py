@@ -32,8 +32,13 @@ class Request:
     # Predicted stream similarity in [0, 1] (session-level prior: a sticky
     # agent loop predicts high, a one-shot query low). When set — and the
     # batcher has a slot_sim_fn — admission places the request on the free
-    # slot whose sim_ema history best matches, instead of first-free.
+    # slot whose sim_ema history best matches, instead of first-free. Left
+    # None, the batcher's `predict_sim_fn` (the learned admission predictor)
+    # supplies the prediction instead of trusting the caller.
     predicted_sim: float | None = None
+    # Session identity for the learned admission predictor: requests sharing
+    # a session share a similarity estimate. None = per-request (rid) keying.
+    session: object = None
     # filled by the scheduler
     output: list = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -41,14 +46,25 @@ class Request:
     telemetry: dict | None = None  # per-request sensor snapshot at retirement
 
 
-def reset_slot(reuse_cache: dict | None, slot: int) -> dict | None:
+def reset_slot(
+    reuse_cache: dict | None, slot: int, *, admission=None
+) -> dict | None:
     """Zero one slot's reuse lane across all sites (stream handoff).
 
     Beyond prev_q/prev_out, the per-slot policy and sensor lanes reset too:
     sim_ema is per-slot ([M]) so a recycled slot must not inherit the previous
     occupant's similarity history (the policy reads the mean across lanes),
     and the sensor's slot_hit_sum/slot_steps lanes restart so retirement
-    telemetry covers exactly one request's residency."""
+    telemetry covers exactly one request's residency.
+
+    `admission` (an AdmissionPredictor, or anything with `.reset_slot(slot)`)
+    gets its per-slot occupant state cleared in the same pass: a new session
+    must not inherit the previous occupant's similarity estimate, and
+    telemetry arriving after the recycle must not be attributed to the
+    departed session. Cleared even when there is no reuse cache — the
+    predictor's slot state is host-side and independent of it."""
+    if admission is not None:
+        admission.reset_slot(slot)
     if reuse_cache is None:
         return None
 
@@ -80,6 +96,8 @@ class ContinuousBatcher:
         on_retire: Callable | None = None,     # (Request) -> None
         slot_sim_fn: Callable | None = None,   # (slot) -> lane sim_ema score
         on_step: Callable | None = None,       # (step_idx) -> None, post-decode
+        predict_sim_fn: Callable | None = None,  # (Request) -> predicted sim
+        on_place: Callable | None = None,      # (Request) -> None, post-admit
     ):
         self.batch_slots = batch_slots
         self.prefill_fn = prefill_fn
@@ -89,6 +107,8 @@ class ContinuousBatcher:
         self.on_retire = on_retire
         self.slot_sim_fn = slot_sim_fn
         self.on_step = on_step
+        self.predict_sim_fn = predict_sim_fn
+        self.on_place = on_place
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.free_slots = list(range(batch_slots))
@@ -106,16 +126,23 @@ class ContinuousBatcher:
         data is reset on admission, but the mode policy and per-site tunables
         key off per-slot sim_ema, so keeping similarity-alike streams on the
         same lanes stabilises the mean the policy reads and avoids mode-flip
-        (recompile) churn when traffic mixes sticky and one-shot streams."""
+        (recompile) churn when traffic mixes sticky and one-shot streams.
+
+        The similarity prediction is the request's own `predicted_sim` when
+        the caller set one; otherwise the batcher's `predict_sim_fn` (the
+        learned admission predictor) supplies it."""
+        pred = req.predicted_sim
+        if pred is None and self.predict_sim_fn is not None:
+            pred = float(self.predict_sim_fn(req))
         if (
-            req.predicted_sim is None
+            pred is None
             or self.slot_sim_fn is None
             or len(self.free_slots) == 1
         ):
             return self.free_slots.pop()
         slot = min(
             self.free_slots,
-            key=lambda s: abs(float(self.slot_sim_fn(s)) - req.predicted_sim),
+            key=lambda s: abs(float(self.slot_sim_fn(s)) - pred),
         )
         self.free_slots.remove(slot)
         self.stats["affinity_placements"] += 1
@@ -126,6 +153,8 @@ class ContinuousBatcher:
             req = self.queue.popleft()
             slot = self._pick_slot(req)
             req.slot = slot
+            if self.on_place is not None:
+                self.on_place(req)
             first = self.prefill_fn(req.prompt[None, :], slot)
             req.output.append(int(first))
             self.active[slot] = req

@@ -10,12 +10,15 @@ serialized table feeds back into serving via ``--tuned-policy``:
     python -m repro.tune.fit --trace trace.jsonl --out tuned.json
     serve --reuse --tuned-policy tuned.json       # exploit
 
-* ``trace`` — schema-validated loader for sensor JSONL output;
-* ``fit``   — the harvest-model fitter (also ``python -m repro.tune.fit``);
-* ``table`` — tuned-table JSON serialization + policy construction.
+* ``trace``   — schema-validated loader for sensor JSONL output;
+* ``harvest`` — the break-even/harvest solver SHARED with the online retuner
+  (`repro.control.retune`), so offline and live fits use one cost model;
+* ``fit``     — the offline fitter front door (``python -m repro.tune.fit``);
+* ``table``   — tuned-table JSON serialization + policy construction.
 """
 
 from repro.tune.fit import FitConfig, fit_site, fit_trace
+from repro.tune.harvest import record_from_sensor, solve_site
 from repro.tune.table import (
     TUNED_TABLE_SCHEMA_VERSION,
     TableSchemaError,
@@ -37,5 +40,7 @@ __all__ = [
     "load_table",
     "load_trace",
     "load_tuned_policy",
+    "record_from_sensor",
     "save_table",
+    "solve_site",
 ]

@@ -4,170 +4,42 @@ The paper runs every layer at one global operating point; its own Fig. 12
 shows that leaves gains on the table (and regresses small / low-similarity
 layers). This fitter closes the loop PR 1 opened: it reads the measured
 per-site skip rates out of a sensor trace and solves, per site, for the knobs
-`ReusePolicy` consults — using the same `repro.sensor.cost_model` constants
-the measured benchmarks report with, so "profitable" here means profitable in
-the units the benchmarks measure.
+`ReusePolicy` consults.
 
-Per-step harvest model for one site (batch M, weights [K, N]):
-
-    saved(r)  = g · r · (W_bytes · E_HBM  +  MACs · 2 · E_MAC)
-    book      = (M·K·(x + prev_q + cur_q + delta)  +  M·N·(read + write O_p))
-                · E_HBM
-
-where r is the stream's code-hit rate, and g is the site's measured *harvest
-efficiency* — the fraction of similarity the current tile granularity turns
-into actually-skipped weight traffic (weight_byte_skip_rate / hit_rate).
-The break-even hit rate r* solves saved(r*) = book; the fitted sim_threshold
-is r* padded by a safety margin. Sites whose measured operating point is
-net-positive get min_work_flops lowered to admit them; net-negative sites get
-it raised to pin them basic. block_k steps down when g shows the granularity
-is wasting similarity (tiles too coarse) and up when the harvest is already
-saturated; churny sites (high mode_transitions/steps) get stiffer hysteresis.
+The solve itself lives in :mod:`repro.tune.harvest` — ONE break-even/harvest
+model shared with the online retuner (`repro.control.retune`), so the offline
+record→fit→reload loop and the live controller can never disagree on
+cost-model units. This module is the offline front door: trace in, tuned
+table out (`python -m repro.tune.fit`).
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core.policy import (
-    DEFAULT_MIN_WORK_FLOPS,
-    RAGGED_BREAK_EVEN_SKIP,
-    ReusePolicy,
-    SiteTunables,
+from repro.core.policy import SiteTunables
+from repro.tune.harvest import (
+    BLOCK_K_CHOICES,
+    BOOKKEEP_BYTES_PER_MN,
+    BOOKKEEP_BYTES_PER_XK,
+    FitConfig,
+    solve_site,
 )
-from repro.sensor.cost_model import E_HBM, E_MAC, FLOPS_PER_MAC
 from repro.tune.trace import SiteTraceRecord, Trace
 
-# Bookkeeping bytes per element, charged at HBM rates (conservative — much of
-# this traffic stays on-chip): read x f32 + prev_q int8, write cur_q int8 +
-# delta f32 per [M, K] element; read + write the f32 [M, N] prev_out panel.
-BOOKKEEP_BYTES_PER_XK = 4.0 + 1.0 + 1.0 + 4.0
-BOOKKEEP_BYTES_PER_MN = 4.0 + 4.0
-
-BLOCK_K_CHOICES = (64, 128, 256, 512)
-
-
-@dataclasses.dataclass(frozen=True)
-class FitConfig:
-    safety_margin: float = 1.25     # threshold = margin × break-even hit rate
-    min_threshold: float = 0.05
-    max_threshold: float = 0.95
-    # harvest-efficiency prior for sites with no measured reuse steps
-    # (granularity.py measures 0.7-0.9 at block_k=256; stay conservative)
-    prior_efficiency: float = 0.7
-    low_efficiency: float = 0.5     # below: halve block_k (tiles too coarse)
-    high_efficiency: float = 0.9    # above: double block_k (harvest saturated)
-    churn_flip_rate: float = 0.10   # transitions/step above this = churny
-    min_work_admit_factor: float = 0.5
-    min_work_reject_factor: float = 2.0
-    # Measured tile-skip rate above which the compacted execution tier
-    # (ragged grid / gathered GEMM) is fitted instead of the masked walk.
-    ragged_min_skip: float = RAGGED_BREAK_EVEN_SKIP
-    # True fits "ragged" (Pallas compacted-grid kernel — the TPU target);
-    # False fits "compact" (jnp gather — what CPU serving actually runs).
-    pallas_target: bool = False
-
-
-def _per_step_costs(rec: SiteTraceRecord) -> tuple[float, float, float]:
-    """(dense weight bytes, dense MACs, bookkeeping joules) per evaluation."""
-    steps = max(rec.steps, 1)
-    gm = -(-rec.batch // rec.block_m)
-    gk = -(-rec.in_features // rec.block_k)
-    if rec.total_weight_bytes > 0:
-        w_bytes = rec.total_weight_bytes / steps
-    else:  # trace without byte totals: assume f32 weights on the padded grid
-        w_bytes = gm * gk * rec.block_k * rec.out_features * 4.0
-    if rec.total_macs > 0:
-        macs = rec.total_macs / steps
-    else:
-        macs = gm * gk * rec.block_m * rec.block_k * rec.out_features
-    book_j = (
-        rec.batch * rec.in_features * BOOKKEEP_BYTES_PER_XK
-        + rec.batch * rec.out_features * BOOKKEEP_BYTES_PER_MN
-    ) * E_HBM
-    return w_bytes, macs, book_j
-
-
-def _saved_per_step_j(w_bytes: float, macs: float, g: float, r: float) -> float:
-    return g * r * (w_bytes * E_HBM + macs * FLOPS_PER_MAC * E_MAC)
-
-
-def _pick_block_k(rec: SiteTraceRecord, g: float, cfg: FitConfig) -> int:
-    # Cap at the largest choice that doesn't exceed the (padded) K extent —
-    # a block_k beyond K degenerates to all-or-nothing skipping.
-    viable = [c for c in BLOCK_K_CHOICES if c <= rec.in_features]
-    if not viable:
-        return BLOCK_K_CHOICES[0]
-    cur = min(viable, key=lambda c: abs(c - rec.block_k))
-    idx = viable.index(cur)
-    if g < cfg.low_efficiency and idx > 0:
-        return viable[idx - 1]
-    if g > cfg.high_efficiency and idx < len(viable) - 1:
-        return viable[idx + 1]
-    return cur
+__all__ = [
+    "BLOCK_K_CHOICES",
+    "BOOKKEEP_BYTES_PER_MN",
+    "BOOKKEEP_BYTES_PER_XK",
+    "FitConfig",
+    "fit_site",
+    "fit_trace",
+    "summary_lines",
+]
 
 
 def fit_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables:
-    """Solve one site's tunables from its measured operating point."""
-    w_bytes, macs, book_j = _per_step_costs(rec)
-    measured_reuse = rec.tile_skip_rate > 0.0 or (
-        rec.mode == "reuse" and rec.steps > 0
-    )
-    g = rec.harvest_efficiency if measured_reuse else 0.0
-    if g <= 0.0:
-        g = cfg.prior_efficiency
-
-    saveable_j = _saved_per_step_j(w_bytes, macs, g, 1.0)
-    if saveable_j <= 0.0:
-        break_even = 1.0  # nothing to harvest; threshold clamps to max
-    else:
-        break_even = book_j / saveable_j
-    sim_threshold = min(
-        max(cfg.safety_margin * break_even, cfg.min_threshold),
-        cfg.max_threshold,
-    )
-
-    # min_work: admit the site if its MEASURED operating point is net-positive
-    # (harvest at the observed hit rate beats the bookkeeping), else pin it
-    # basic — the per-site replacement for the one global small-layer cutoff.
-    net_j = _saved_per_step_j(w_bytes, macs, g, rec.hit_rate) - book_j
-    if net_j > 0.0:
-        min_work = min(DEFAULT_MIN_WORK_FLOPS,
-                       cfg.min_work_admit_factor * rec.work_flops)
-    else:
-        min_work = max(DEFAULT_MIN_WORK_FLOPS,
-                       cfg.min_work_reject_factor * rec.work_flops)
-
-    flip_rate = rec.mode_transitions / max(rec.steps, 1)
-    churny = flip_rate > cfg.churn_flip_rate or rec.suppressed_flips > 0
-
-    # Execution substrate: above the break-even skip rate the compacted tier
-    # converts the measured skip into elided grid steps / a shrunken GEMM.
-    # The shrink scales with gk, so when promoting a site we also cap block_k
-    # at a compactable granularity (gk >= 2); the budget is the measured
-    # occupancy plus headroom (overflow steps fall back at runtime, so a
-    # tight guess costs a fallback, never a wrong answer).
-    block_k = _pick_block_k(rec, g, cfg)
-    exec_path: str | None = None
-    max_active_k: int | None = None
-    if measured_reuse and rec.tile_skip_rate >= cfg.ragged_min_skip:
-        compactable = [c for c in BLOCK_K_CHOICES if 2 * c <= rec.in_features]
-        if compactable:
-            block_k = min(block_k, compactable[-1])
-            gk = -(-rec.in_features // block_k)
-            exec_path = "ragged" if cfg.pallas_target else "compact"
-            max_active_k = ReusePolicy.ragged_budget(gk, rec.tile_skip_rate)
-
-    base = SiteTunables()
-    return SiteTunables(
-        sim_threshold=sim_threshold,
-        min_work_flops=min_work,
-        block_k=block_k,
-        hysteresis_margin=base.hysteresis_margin * (2.0 if churny else 1.0),
-        hysteresis_steps=base.hysteresis_steps * (2 if churny else 1),
-        exec_path=exec_path,
-        max_active_k=max_active_k,
-    )
+    """Solve one site's tunables from its measured operating point (thin
+    offline wrapper over the shared harvest model)."""
+    return solve_site(rec, cfg)
 
 
 def fit_trace(

@@ -52,6 +52,9 @@ class SiteTraceRecord:
     exec_path: str = "auto"
     grid_steps: float = 0.0
     grid_step_skip_rate: float = 0.0
+    # Schema-v4 field: evaluations whose live tile count overflowed the
+    # compacted-path budget (the lax.cond full-extent fallback fired).
+    overflow_fallbacks: int = 0
 
     @property
     def work_flops(self) -> float:
@@ -85,9 +88,10 @@ _REQUIRED_SITE_FIELDS = (
 )
 
 
-# v2 rows lack only fields this loader defaults (grid_steps, exec_path), so
-# they stay loadable; v1 (unversioned) rows lack the geometry and are refused.
-SUPPORTED_SCHEMA_VERSIONS = (2, SENSOR_SCHEMA_VERSION)
+# v2/v3 rows lack only fields this loader defaults (grid_steps + exec_path on
+# v2, overflow_fallbacks on both), so they stay loadable; v1 (unversioned)
+# rows lack the geometry and are refused.
+SUPPORTED_SCHEMA_VERSIONS = (2, 3, SENSOR_SCHEMA_VERSION)
 
 
 def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:
@@ -139,6 +143,7 @@ def _site_record(row: dict[str, Any], lineno: int, path: str) -> SiteTraceRecord
         exec_path=str(row.get("exec_path", "auto")),
         grid_steps=float(row.get("grid_steps", 0.0)),
         grid_step_skip_rate=float(row.get("grid_step_skip_rate", 0.0)),
+        overflow_fallbacks=int(row.get("overflow_fallbacks", 0)),
     )
 
 
