@@ -18,8 +18,11 @@ Methodology notes:
   into the jitted HLO, so step count translates to executed work exactly the
   way it does on the TPU pipeline (relative ordering is the reproduced
   object; absolute microseconds are CPU numbers).
-* Results land in BENCH_kernels.json — the perf trajectory artifact the CI
-  bench-smoke job uploads per commit.
+* Results land in BENCH_kernels.json — the perf TRAJECTORY artifact: each run
+  APPENDS one timestamped JSONL row (a legacy single-object file from older
+  builds is absorbed as the first row), so consecutive runs accumulate a real
+  history instead of overwriting it. The CI bench-smoke job runs the
+  benchmark twice and asserts the file grew between runs.
 
 Run:  PYTHONPATH=src python -m benchmarks.wallclock [--tiny] [--out PATH]
 """
@@ -28,6 +31,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +41,55 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.core.similarity import block_zero_mask
 from repro.kernels import ops
+
+
+def load_runs(path: str) -> list[dict]:
+    """Previous runs from a trajectory file: JSONL rows, or — for a file
+    written by a pre-trajectory build — one pretty-printed JSON object,
+    absorbed as the single prior run."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        content = f.read().strip()
+    if not content:
+        return []
+    try:
+        return [json.loads(line) for line in content.splitlines() if line]
+    except json.JSONDecodeError:
+        pass
+    try:
+        return [json.loads(content)]  # legacy single-doc format
+    except json.JSONDecodeError:
+        print(f"warning: {path} is neither JSONL nor JSON; starting fresh")
+        return []
+
+
+def _is_jsonl(path: str) -> bool:
+    try:
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    json.loads(line)
+        return True
+    except (OSError, json.JSONDecodeError):
+        return False
+
+
+def append_run(path: str, doc: dict) -> int:
+    """Append one run to the trajectory. A legacy pretty-printed single-doc
+    file is migrated to JSONL once, via write-temp-then-rename so a crash
+    can never truncate the accumulated history; steady state is a true O(1)
+    append. Returns the number of runs now on file."""
+    runs = load_runs(path)
+    if runs and not _is_jsonl(path):
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            for run in runs:
+                f.write(json.dumps(run, sort_keys=True) + "\n")
+        os.replace(tmp, path)
+    with open(path, "a") as f:
+        f.write(json.dumps(doc, sort_keys=True) + "\n")
+    return len(runs) + 1
 
 
 def build_stream(rng, m, k, bm, bk, skip_prob):
@@ -133,6 +187,7 @@ def main(argv=None):
         results["ragged"]["us_per_call"], 1e-9)
     doc = {
         "bench": "wallclock",
+        "ts": time.time(),
         "config": {
             "m": m, "k": k, "n": n, "block_m": bm, "block_n": bn,
             "block_k": bk, "tile_skip_rate": float(skip_rate),
@@ -141,11 +196,10 @@ def main(argv=None):
         "results": results,
         "ragged_vs_kernel_speedup": ragged_speedup,
     }
-    with open(args.out, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
+    n_runs = append_run(args.out, doc)
     print(f"skip_rate={skip_rate:.2f} budget={budget}/{gk} "
-          f"ragged_vs_kernel_speedup={ragged_speedup:.2f}x -> {args.out}")
+          f"ragged_vs_kernel_speedup={ragged_speedup:.2f}x -> {args.out} "
+          f"(trajectory: {n_runs} runs)")
 
     for name, r in results.items():
         assert r["exact_vs_oracle"], f"{name} diverged from the oracle"

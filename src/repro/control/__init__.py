@@ -14,7 +14,11 @@ counters directly — no JSONL round trip:
 * :mod:`admit`      — learned per-session admission predictor
                       (replaces the caller-trusted `Request.predicted_sim`);
 * :mod:`report`     — typed decisions + the JSONL decision journal
-                      (audit/replay).
+                      (audit/replay);
+* :mod:`replay`     — ``python -m repro.control.replay journal.jsonl``:
+                      re-applies a journal to a fresh policy state (and,
+                      with ``--arch``, a fresh engine) and asserts the
+                      reproduced trajectory matches the recorded one.
 
 Serving entry point: ``python -m repro.launch.serve ... --control-every N``.
 """
@@ -29,7 +33,13 @@ from repro.control.report import (
     DecisionJournal,
     load_journal,
 )
-from repro.control.retune import bounded_tunables, snapshot_entry, window_record
+from repro.control.replay import ReplayResult, replay_rows
+from repro.control.retune import (
+    bounded_tunables,
+    snapshot_entry,
+    window_layer_records,
+    window_record,
+)
 
 __all__ = [
     "CONTROL_JOURNAL_SCHEMA_VERSION",
@@ -39,9 +49,12 @@ __all__ = [
     "Controller",
     "Decision",
     "DecisionJournal",
+    "ReplayResult",
     "adapt_budget",
     "bounded_tunables",
     "load_journal",
+    "replay_rows",
     "snapshot_entry",
+    "window_layer_records",
     "window_record",
 ]

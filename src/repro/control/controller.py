@@ -15,11 +15,18 @@ runs:
    per-session similarity from retirement telemetry; the controller journals
    its population estimate so admission drift is auditable.
 
+Stacked sites get a second retune tier: each layer's own windowed counters
+feed the same harvest model and land as "site@layer" ctrl-lane rows —
+per-layer thresholds inside one scanned stack, journaled per layer, applied
+as array writes (never a retrace).
+
 `Controller.step(engine, cache)` returns a :class:`ControlReport`; the caller
 rebuilds its jitted step exactly when `report.changed` (the same contract as
 `ReuseEngine.refresh_modes`, which the controller invokes last so mode/exec
 transitions see the freshly-installed tunables and keep their hysteresis +
-cooldown guardrails). Every move lands in the decision journal.
+cooldown guardrails — and whose per-layer mode flips, being ctrl-array
+writes, are journaled but never force a rebuild). Every move lands in the
+decision journal.
 """
 
 from __future__ import annotations
@@ -33,15 +40,22 @@ from repro.control.report import ControlReport, Decision, DecisionJournal
 from repro.control.retune import (
     bounded_tunables,
     snapshot_entry,
+    window_layer_records,
     window_record,
 )
 from repro.core.reuse_cache import resolve_exec_path
+from repro.tune.fit import fit_layer
 from repro.tune.harvest import FitConfig, solve_site
 
 # SiteTunables fields the retuner may move, journaled field-by-field.
 _TUNABLE_FIELDS = (
     "sim_threshold", "min_work_flops", "block_k",
     "hysteresis_margin", "hysteresis_steps", "exec_path", "max_active_k",
+)
+# The array-resident subset a per-layer ctrl-lane row may move (spec-level
+# knobs stay site-granular — they are baked into the traced dispatch).
+_LAYER_FIELDS = (
+    "sim_threshold", "min_work_flops", "hysteresis_margin", "hysteresis_steps",
 )
 
 
@@ -134,7 +148,7 @@ class Controller:
                 self._snaps[name] = cur  # first sight: window starts now
                 continue
             rec = window_record(
-                name, spec, engine.modes[name],
+                name, spec, engine.site_mode(cache, name),
                 resolve_exec_path(spec, engine.impl), prev, cur,
             )
             if rec is None or rec.steps < cfg.min_window_steps:
@@ -155,7 +169,7 @@ class Controller:
                 max_min_work_raise=cfg.max_min_work_raise,
             )
             if bounded != current_t:
-                spec_changed = engine.apply_tunables(name, bounded)
+                spec_changed = engine.apply_tunables(name, bounded, cache)
                 if spec_changed:
                     retrace[name] = "retune"
                 for f in _TUNABLE_FIELDS:
@@ -195,6 +209,53 @@ class Controller:
                     reason=f"rescaled with block_k {spec.block_k}->"
                            f"{spec_after.block_k} (same covered K extent)",
                 ))
+
+            # -- loop 1b: per-layer ctrl-lane retune for stacked sites —
+            # each layer's own windowed operating point through the SAME
+            # harvest model, bounded exactly like the site move, installed
+            # as a "site@layer" row (an array write into the ctrl block, so
+            # NO retrace) and journaled per layer.
+            layer_recs = window_layer_records(
+                name, spec_after, engine.layer_modes(cache, name),
+                resolve_exec_path(spec_after, engine.impl), prev, cur,
+            )
+            layers_moved = False
+            for lyr, lrec in sorted(layer_recs.items()):
+                if lrec.steps < cfg.min_window_steps:
+                    continue
+                cur_l = engine.policy.resolve(name, layer=lyr)
+                bounded_l, reasons_l = bounded_tunables(
+                    cur_l, fit_layer(lrec, fit_cfg),
+                    current_block_k=spec_after.block_k,
+                    max_threshold_step=cfg.max_threshold_step,
+                    max_min_work_raise=cfg.max_min_work_raise,
+                )
+                moved = {
+                    f: (getattr(cur_l, f), getattr(bounded_l, f))
+                    for f in _LAYER_FIELDS
+                    if getattr(cur_l, f) != getattr(bounded_l, f)
+                }
+                if not moved:
+                    continue
+                # cache=None: lane sync deferred to ONE pass after the loop
+                # (per-layer sync would rebuild all L lanes per moved layer)
+                engine.apply_tunables(name, bounded_l, layer=lyr)
+                layers_moved = True
+                for f, (b, a) in moved.items():
+                    why = next(
+                        (r for r in reasons_l
+                         if f.startswith(r.split(" ", 1)[0])),
+                        "; ".join(reasons_l) or "refit",
+                    )
+                    decisions.append(Decision(
+                        step=step, site=name, kind="retune", field=f,
+                        before=b, after=a, layer=lyr,
+                        reason=f"layer window {lrec.steps} steps, "
+                               f"hit {lrec.hit_rate:.2f}, "
+                               f"skip {lrec.tile_skip_rate:.2f}: {why}",
+                    ))
+            if layers_moved:
+                engine._sync_ctrl(name, cache)
 
             # -- loop 2: budget adaptation from measured overflow fallbacks
             spec = spec_after  # retune may have replaced it
@@ -236,26 +297,29 @@ class Controller:
                         after=engine.sites[name].max_active_k, reason=why,
                     ))
 
-        # -- hysteretic mode/exec refresh sees the freshly-installed tunables
+        # -- hysteretic mode/exec refresh sees the freshly-installed tunables.
+        # Mode flips are per-layer ctrl-array writes (journaled from the
+        # engine's event list, NO retrace); only exec-path flips — spec
+        # changes — come back in the refresh result and force a rebuild.
         if windows:
-            modes_before = dict(engine.modes)
             paths_before = {n: s.exec_path for n, s in engine.sites.items()}
             for name, what in engine.refresh_modes(cache).items():
                 retrace[name] = what
-                if what.startswith("exec:"):
-                    decisions.append(Decision(
-                        step=step, site=name, kind="exec", field="exec_path",
-                        before=paths_before[name],
-                        after=engine.sites[name].exec_path,
-                        reason="measured skip rate crossed the compaction "
-                               "break-even (refresh_exec_paths)",
-                    ))
-                else:
-                    decisions.append(Decision(
-                        step=step, site=name, kind="mode", field="mode",
-                        before=modes_before[name], after=what,
-                        reason="hysteretic decide_mode on live sim_ema",
-                    ))
+                decisions.append(Decision(
+                    step=step, site=name, kind="exec", field="exec_path",
+                    before=paths_before[name],
+                    after=engine.sites[name].exec_path,
+                    reason="measured skip rate crossed the compaction "
+                           "break-even (refresh_exec_paths)",
+                ))
+            for ev in engine.last_mode_events:
+                decisions.append(Decision(
+                    step=step, site=ev["site"], kind="mode", field="mode",
+                    before=ev["before"], after=ev["after"], layer=ev["layer"],
+                    reason="hysteretic per-layer decide_modes on live "
+                           f"sim_ema {ev['sim_ema']:.2f} (ctrl-array write, "
+                           "no retrace)",
+                ))
 
         # -- loop 3: admission predictor drift, journaled
         admission = None

@@ -16,12 +16,17 @@ import json
 import time
 from typing import Any
 
-CONTROL_JOURNAL_SCHEMA_VERSION = 1
+#   1 — PR 4 emission
+#   2 — decision rows carry `layer` (per-layer ctrl-lane retunes and
+#       per-layer kernelMode flips of stacked sites; null = site-granular)
+CONTROL_JOURNAL_SCHEMA_VERSION = 2
 
 # Decision kinds: which feedback loop acted.
 #   "retune" — online refit of a SiteTunables knob from windowed counters
+#              (layer set = a "site@layer" ctrl-lane row, no retrace)
 #   "budget" — max_active_k widened/tightened from the overflow-fallback rate
-#   "mode"   — kernelMode flip applied by the hysteretic refresh
+#   "mode"   — kernelMode flip applied by the hysteretic refresh (an array
+#              write into the ctrl block; layer set for stacked sites)
 #   "exec"   — execution-substrate flip applied by the hysteretic refresh
 #   "admit"  — admission-predictor population estimate moved
 DECISION_KINDS = ("retune", "budget", "mode", "exec", "admit")
@@ -38,6 +43,10 @@ class Decision:
     before: Any
     after: Any
     reason: str          # measured evidence, human-readable
+    # Which layer of a stacked site the decision targets (per-layer ctrl-lane
+    # writes: "site@layer" retune rows, per-layer mode flips). None =
+    # site-granular (spec-level knobs, unstacked sites).
+    layer: int | None = None
 
     def __post_init__(self) -> None:
         if self.kind not in DECISION_KINDS:
@@ -71,8 +80,11 @@ class ControlReport:
             f"retrace={sorted(self.retrace) or '-'}"
         ]
         for d in self.decisions:
+            where = d.site or "<model>"
+            if d.layer is not None:
+                where = f"{where}@{d.layer}"
             lines.append(
-                f"  {d.kind:6s} {d.site or '<model>':24s} "
+                f"  {d.kind:6s} {where:24s} "
                 f"{d.field}: {d.before} -> {d.after}  ({d.reason})"
             )
         return lines

@@ -28,9 +28,20 @@ from repro.tune.harvest import BLOCK_K_CHOICES
 from repro.tune.trace import SiteTraceRecord
 
 
+_COUNTER_KEYS = (
+    "skipped_tiles", "computed_tiles", "skipped_macs", "computed_macs",
+    "skipped_weight_bytes", "total_weight_bytes", "grid_steps",
+    "mode_transitions",
+)
+
+
 def snapshot_entry(entry: dict) -> dict | None:
     """Host-side snapshot of one cache entry's cumulative counters, summed
-    over any leading layer dimension (one small device→host transfer)."""
+    over any leading layer dimension (one small device→host transfer).
+
+    For STACKED sites the snapshot additionally keeps the un-summed per-layer
+    counter arrays under ``"layers"`` — the per-layer retune loop diffs those
+    to give each layer of a stack its own windowed operating point."""
     sensor = entry.get("sensor")
     if sensor is None:
         return None
@@ -38,14 +49,7 @@ def snapshot_entry(entry: dict) -> dict | None:
     def total(key: str) -> float:
         return float(np.sum(np.asarray(sensor[key])))
 
-    snap = {
-        k: total(k)
-        for k in (
-            "skipped_tiles", "computed_tiles", "skipped_macs", "computed_macs",
-            "skipped_weight_bytes", "total_weight_bytes", "grid_steps",
-            "mode_transitions",
-        )
-    }
+    snap = {k: total(k) for k in _COUNTER_KEYS}
     snap["overflow_fallbacks"] = (
         total("overflow_fallbacks") if "overflow_fallbacks" in sensor else 0.0
     )
@@ -53,7 +57,19 @@ def snapshot_entry(entry: dict) -> dict | None:
     snap["suppressed_flips"] = float(np.max(np.asarray(sensor["suppressed_flips"])))
     hit = np.asarray(sensor["slot_hit_sum"], np.float64)
     ss = np.asarray(sensor["slot_steps"], np.float64)
-    if hit.ndim > 1:  # stacked site: sum the layer dimension, keep lanes
+    if hit.ndim > 1:  # stacked site: per-layer arrays kept, lanes summed
+        layers: dict[str, np.ndarray] = {
+            k: np.asarray(sensor[k], np.float64) for k in _COUNTER_KEYS
+        }
+        layers["overflow_fallbacks"] = (
+            np.asarray(sensor["overflow_fallbacks"], np.float64)
+            if "overflow_fallbacks" in sensor
+            else np.zeros(hit.shape[0])
+        )
+        layers["slot_hit_sum"] = hit          # [L, M]
+        layers["slot_steps"] = ss             # [L, M]
+        layers["steps"] = np.asarray(entry["steps"], np.float64)
+        snap["layers"] = layers
         hit = hit.sum(axis=tuple(range(hit.ndim - 1)))
         ss = ss.sum(axis=tuple(range(ss.ndim - 1)))
     snap["slot_hit_sum"] = hit
@@ -79,24 +95,39 @@ def window_record(
     out-accumulated their step delta (reset_slot zeroed them mid-window and
     a new occupant overran the old sums) drop out of the window's hit rate
     rather than poisoning it with cross-session or >1 values."""
-    d = {k: cur[k] - prev[k] for k in cur if not isinstance(cur[k], np.ndarray)}
+    d = {k: cur[k] - prev[k] for k in cur if isinstance(cur[k], float)}
     steps = int(round(d["steps"]))
     if steps <= 0:
         return None
+    hit = _window_hit_rate(
+        cur["slot_hit_sum"] - prev["slot_hit_sum"],
+        cur["slot_steps"] - prev["slot_steps"],
+    )
+    return _record_from_deltas(
+        name, spec, mode, exec_path, d, hit,
+        batch=int(cur["slot_steps"].shape[-1]),
+    )
+
+
+def _window_hit_rate(d_hit: np.ndarray, d_ss: np.ndarray) -> float:
+    active = (d_ss > 0) & (d_hit >= 0.0) & (d_hit <= d_ss)
+    return float(np.mean(d_hit[active] / d_ss[active])) if active.any() else 0.0
+
+
+def _record_from_deltas(
+    name: str, spec, mode: str, exec_path: str,
+    d: dict[str, float], hit: float, *, batch: int, layer: int | None = None,
+) -> SiteTraceRecord:
     skipped = d["skipped_tiles"]
     total_tiles = skipped + d["computed_tiles"]
     total_macs = d["skipped_macs"] + d["computed_macs"]
-    d_hit = cur["slot_hit_sum"] - prev["slot_hit_sum"]
-    d_ss = cur["slot_steps"] - prev["slot_steps"]
-    active = (d_ss > 0) & (d_hit >= 0.0) & (d_hit <= d_ss)
-    hit = float(np.mean(d_hit[active] / d_ss[active])) if active.any() else 0.0
     gn = -(-spec.out_features // spec.block_n)
     dense_grid = total_tiles * gn
     return SiteTraceRecord(
         site=name,
         mode=mode,
-        steps=steps,
-        batch=int(cur["slot_steps"].shape[-1]),
+        steps=int(round(d["steps"])),
+        batch=batch,
         in_features=spec.in_features,
         out_features=spec.out_features,
         block_m=spec.block_m,
@@ -116,7 +147,54 @@ def window_record(
         grid_steps=d["grid_steps"],
         grid_step_skip_rate=max(0.0, 1.0 - d["grid_steps"] / max(dense_grid, 1e-9)),
         overflow_fallbacks=int(round(d["overflow_fallbacks"])),
+        layer=layer,
     )
+
+
+def window_layer_records(
+    name: str,
+    spec,
+    layer_modes: list[str],
+    exec_path: str,
+    prev: dict,
+    cur: dict,
+) -> dict[int, SiteTraceRecord]:
+    """Per-layer windowed operating points of one STACKED site.
+
+    Diffs the un-summed per-layer counter arrays both snapshots kept under
+    ``"layers"`` and yields one solver-ready record per layer with a
+    non-empty window — the input of the controller's per-layer retune loop
+    (ctrl-lane thresholds, journaled per layer). Empty for unstacked sites
+    or snapshots taken before the per-layer capture existed."""
+    pl, cl = prev.get("layers"), cur.get("layers")
+    if pl is None or cl is None:
+        return {}
+    n_layers = cl["slot_steps"].shape[0]
+    out: dict[int, SiteTraceRecord] = {}
+    for layer in range(n_layers):
+        d = {k: float(cl[k][layer] - pl[k][layer]) for k in _COUNTER_KEYS}
+        d["overflow_fallbacks"] = float(
+            cl["overflow_fallbacks"][layer] - pl["overflow_fallbacks"][layer]
+        )
+        steps_arr = cl["steps"]
+        d["steps"] = float(
+            (steps_arr[layer] - pl["steps"][layer])
+            if np.ndim(steps_arr) else (cur["steps"] - prev["steps"])
+        )
+        # suppression is site-level; a layer window inherits the site delta
+        d["suppressed_flips"] = cur["suppressed_flips"] - prev["suppressed_flips"]
+        if int(round(d["steps"])) <= 0:
+            continue
+        hit = _window_hit_rate(
+            cl["slot_hit_sum"][layer] - pl["slot_hit_sum"][layer],
+            cl["slot_steps"][layer] - pl["slot_steps"][layer],
+        )
+        mode = layer_modes[layer] if layer < len(layer_modes) else "auto"
+        out[layer] = _record_from_deltas(
+            name, spec, mode, exec_path, d, hit,
+            batch=int(cl["slot_steps"].shape[-1]), layer=layer,
+        )
+    return out
 
 
 def _step_block_k(current: int, target: int) -> int:

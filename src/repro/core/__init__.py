@@ -1,11 +1,20 @@
 from repro.core.delta import DeltaEncoding, delta_encode, delta_encode_int8
 from repro.core.engine import ReuseEngine
-from repro.core.policy import ReusePolicy, SiteTunables
+from repro.core.policy import (
+    MODE_BASIC,
+    MODE_REUSE,
+    ReusePolicy,
+    SiteTunables,
+    layer_key,
+    mode_name,
+    split_layer_key,
+)
 from repro.core.reuse_cache import (
     ReuseSiteSpec,
     cache_bytes,
     init_reuse_cache,
     init_site_cache,
+    init_site_ctrl,
 )
 from repro.core.reuse_linear import ReuseStats, reuse_linear
 from repro.core.similarity import (
@@ -18,6 +27,8 @@ from repro.core.similarity import (
 
 __all__ = [
     "DeltaEncoding",
+    "MODE_BASIC",
+    "MODE_REUSE",
     "ReuseEngine",
     "ReusePolicy",
     "ReuseSiteSpec",
@@ -31,7 +42,11 @@ __all__ = [
     "harvestable_similarity",
     "init_reuse_cache",
     "init_site_cache",
+    "init_site_ctrl",
+    "layer_key",
+    "mode_name",
     "reuse_linear",
     "row_code_similarity",
     "similarity_breakdown",
+    "split_layer_key",
 ]

@@ -2,16 +2,27 @@
 
 The paper's flow: the framework prepares a parameter structure (addresses,
 lengths, kernelMode, dataflow) and issues `crs` per layer/tile; ReuseSensor
-generates the kernel. Here:
+generates the kernel — and parametrizes kernelMode LAYER BY LAYER. Here:
 
 * `register(...)` declares a reuse site (one per unique linear op; sites used
   inside scan-over-layers carry a leading layer dimension in their cache);
-* `init_cache(batch)` builds the cache pytree threaded through serve_step;
-* `apply(...)` executes one site — the crs call;
-* `refresh_modes(cache)` is the host-side policy pass between steps.
+* `init_cache(batch)` builds the cache pytree threaded through serve_step —
+  including, per site, the ARRAY-RESIDENT control block (`ctrl`): per-layer
+  kernelMode ids, live sim_threshold / min_work operating point, per-layer
+  flip cooldown and budget-occupancy EMA;
+* `apply(...)` executes one site — the crs call; kernelMode is read from the
+  ctrl lane the scan sliced for this layer (lax.cond in reuse_linear), so a
+  deep stack runs mixed modes inside ONE trace;
+* `refresh_modes(cache)` is the host-side policy pass between steps: a
+  vectorized per-layer decide over each site's ctrl block. Mode flips are
+  array writes (no retrace); only spec-level changes — exec_path / block_k /
+  max_active_k — require rebuilding the jitted step, and only those are
+  returned.
 
-The engine itself is static configuration; all mutable state lives in the
-cache pytree so steps stay pure and jit/pjit-friendly.
+The engine itself is static configuration; ALL mutable control state lives in
+the cache pytree next to the counters, so steps stay pure and jit/pjit-
+friendly and the policy's current operating point checkpoints/donates/shards
+with the rest of the serving state.
 """
 
 from __future__ import annotations
@@ -21,11 +32,27 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.policy import ReusePolicy, SiteTunables
+from repro.core.policy import (
+    MODE_BASIC,
+    MODE_REUSE,
+    ReusePolicy,
+    SiteTunables,
+    layer_key,
+    mode_name,
+)
 from repro.core.reuse_cache import ReuseSiteSpec, init_site_cache
 from repro.core.reuse_linear import ReuseStats, reuse_linear
-from repro.kernels.ops import clamp_budget
+
+
+def clamp_budget(max_active_k: int | None, gk: int) -> int:
+    """kernels.ops.clamp_budget, imported lazily: kernels.ops imports
+    repro.core.delta, so a module-level import back into the engine closes
+    an import cycle for any consumer that loads repro.kernels first."""
+    from repro.kernels.ops import clamp_budget as _clamp
+
+    return _clamp(max_active_k, gk)
 
 
 @dataclasses.dataclass
@@ -33,13 +60,16 @@ class ReuseEngine:
     policy: ReusePolicy = dataclasses.field(default_factory=ReusePolicy)
     impl: str = "jnp"
     sites: dict[str, ReuseSiteSpec] = dataclasses.field(default_factory=dict)
-    # current kernelMode per site; refreshed host-side between steps
-    modes: dict[str, str] = dataclasses.field(default_factory=dict)
     # per-site leading layer count (0 = unstacked site)
     stacking: dict[str, int] = dataclasses.field(default_factory=dict)
-    # mode-flip cooldown per site: refresh passes left before the next flip
-    # is allowed (each flip costs a recompile; see SiteTunables hysteresis)
-    cooldown: dict[str, int] = dataclasses.field(default_factory=dict)
+    # exec-path flip cooldown per site: refresh passes left before the next
+    # substrate change is allowed (each one retraces the step). kernelMode
+    # cooldown is PER LAYER and lives in the cache ctrl block instead.
+    exec_cooldown: dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-layer mode flips applied by the most recent refresh_modes pass
+    # ({site, layer, before, after, sim_ema}; layer None = unstacked) — the
+    # controller journals these; they do NOT require a retrace
+    last_mode_events: list[dict] = dataclasses.field(default_factory=list)
 
     def register(
         self,
@@ -74,20 +104,29 @@ class ReuseEngine:
         )
         self.sites[name] = spec
         self.stacking[name] = n_layers
-        # Start optimistic (paper's default is reuse-on); policy may demote.
-        self.modes[name] = "reuse" if mode == "auto" else mode
-        self.cooldown[name] = 0
+        self.exec_cooldown[name] = 0
         return spec
 
     def init_cache(self, batch: int) -> dict[str, Any]:
         cache: dict[str, Any] = {}
         for name, spec in self.sites.items():
-            entry = init_site_cache(spec, batch)
+            entry = init_site_cache(spec, batch, self.policy.resolve(name))
             n_layers = self.stacking[name]
             if n_layers:
                 entry = jax.tree.map(
                     lambda x: jnp.broadcast_to(x, (n_layers, *x.shape)).copy(),
                     entry,
+                )
+                # per-layer tunables rows ("site@layer") land in the ctrl
+                # lanes here; spec-level knobs stay site-granular
+                ts = [self.policy.resolve(name, layer=layer)
+                      for layer in range(n_layers)]
+                entry["ctrl"] = dict(
+                    entry["ctrl"],
+                    sim_threshold=jnp.asarray(
+                        [t.sim_threshold for t in ts], jnp.float32),
+                    min_work=jnp.asarray(
+                        [t.min_work_flops for t in ts], jnp.float32),
                 )
             cache[name] = entry
         return cache
@@ -101,20 +140,74 @@ class ReuseEngine:
         cache_entry: dict[str, jax.Array],
     ) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
         spec = self.sites[name]
+        # Explicitly pinned sites keep the static single-branch dispatch;
+        # "auto" sites branch on the ctrl lane the caller's scan sliced.
+        mode = spec.mode if spec.mode in ("reuse", "basic") else None
         return reuse_linear(
-            x, w, b, cache_entry, spec, mode=self.modes[name], impl=self.impl
+            x, w, b, cache_entry, spec, mode=mode, impl=self.impl
         )
 
-    def apply_tunables(self, name: str, t: SiteTunables) -> bool:
-        """Install live per-site tunables — the online retuner's write path.
+    # ------------------------------------------------ ctrl-block interrogation
 
-        The policy-table entry is replaced (decide_mode and the refresh
-        passes pick the new knobs up immediately); spec fields baked into the
-        traced dispatch re-resolve here: block_k, and — for a site already ON
-        a compacted path — its k-extent budget. Mode and exec-path
-        *transitions* stay with `refresh_modes`, which carries the hysteresis
-        margin and the flip cooldown. Returns True when the spec changed, so
-        callers rebuild the jitted step."""
+    @staticmethod
+    def entry_mode_ids(entry: dict[str, Any]) -> np.ndarray:
+        """A site's per-layer mode ids as a 1-d host array ([1] unstacked)."""
+        return np.atleast_1d(np.asarray(entry["ctrl"]["mode_id"]))
+
+    def layer_modes(self, cache: dict[str, Any], name: str) -> list[str]:
+        return [mode_name(m) for m in self.entry_mode_ids(cache[name])]
+
+    def site_mode(self, cache: dict[str, Any], name: str) -> str:
+        """One site's kernelMode summary: "reuse"/"basic" when uniform over
+        layers, "mixed" when a stack settled distinct per-layer modes."""
+        ids = self.entry_mode_ids(cache[name])
+        if np.all(ids == ids[0]):
+            return mode_name(ids[0])
+        return "mixed"
+
+    def mode_summary(self, cache: dict[str, Any]) -> dict[str, str]:
+        return {name: self.site_mode(cache, name) for name in self.sites}
+
+    def set_mode(
+        self, cache: dict[str, Any], name: str, mode: str,
+        *, layer: int | None = None,
+    ) -> None:
+        """Force kernelMode for a site (all layers, or one layer's lane) by
+        writing the ctrl block — an array write, no retrace."""
+        mid = MODE_REUSE if mode == "reuse" else MODE_BASIC
+        entry = cache[name]
+        cur = entry["ctrl"]["mode_id"]
+        new = jnp.full_like(cur, mid) if layer is None else cur.at[layer].set(mid)
+        cache[name] = dict(entry, ctrl=dict(entry["ctrl"], mode_id=new))
+
+    # ------------------------------------------------------- live write paths
+
+    def apply_tunables(
+        self,
+        name: str,
+        t: SiteTunables,
+        cache: dict[str, Any] | None = None,
+        *,
+        layer: int | None = None,
+    ) -> bool:
+        """Install live tunables — the online retuner's write path.
+
+        `layer=None` replaces the site-level policy-table entry; spec fields
+        baked into the traced dispatch re-resolve here: block_k, and — for a
+        site already ON a compacted path — its k-extent budget. `layer=i`
+        installs a per-layer row (`"site@i"` key) instead and touches NO spec
+        field (per-layer knobs are array-resident by construction).
+
+        With `cache` given, the affected ctrl lanes (sim_threshold/min_work)
+        are re-synced from the updated table in the same pass, so the next
+        refresh decides on the new operating point without a separate sync.
+        Mode and exec-path *transitions* stay with `refresh_modes`, which
+        carries the hysteresis margin and the flip cooldowns. Returns True
+        when the SPEC changed, so callers rebuild the jitted step."""
+        if layer is not None:
+            self.policy.site_tunables[layer_key(name, layer)] = t
+            self._sync_ctrl(name, cache)
+            return False
         self.policy.site_tunables[name] = t
         spec = self.sites[name]
         new = spec
@@ -145,16 +238,42 @@ class ReuseEngine:
             new = dataclasses.replace(
                 new, max_active_k=clamp_budget(int(t.max_active_k), gk)
             )
+        self._sync_ctrl(name, cache)
         if new == spec:
             return False
         self.sites[name] = new
         return True
 
+    def _sync_ctrl(self, name: str, cache: dict[str, Any] | None) -> None:
+        """Re-derive a site's ctrl sim_threshold/min_work lanes from the
+        policy table (per-layer rows win over the site row, as in resolve)."""
+        if cache is None:
+            return
+        entry = cache.get(name)
+        if entry is None or "ctrl" not in entry:
+            return
+        n_layers = self.stacking.get(name, 0)
+        if n_layers:
+            ts = [self.policy.resolve(name, layer=layer)
+                  for layer in range(n_layers)]
+            thr = jnp.asarray([t.sim_threshold for t in ts], jnp.float32)
+            mw = jnp.asarray([t.min_work_flops for t in ts], jnp.float32)
+        else:
+            t = self.policy.resolve(name)
+            thr = jnp.asarray(t.sim_threshold, jnp.float32)
+            mw = jnp.asarray(t.min_work_flops, jnp.float32)
+        cache[name] = dict(
+            entry, ctrl=dict(entry["ctrl"], sim_threshold=thr, min_work=mw)
+        )
+
     def set_budget(self, name: str, budget: int) -> bool:
         """Re-point a compacted site's static k-extent budget — the online
-        budget adapter's write path. Keeps the policy table in sync so the
-        next exec-path refresh or retune doesn't silently revert the
-        adaptation. Returns True when the spec changed (retrace)."""
+        budget adapter's write path. The budget is a grid extent baked into
+        the traced kernel, so it stays site-granular (per-layer occupancy is
+        the MEASUREMENT — ctrl["occupancy"] / the per-layer overflow counters
+        — feeding this one knob). Keeps the policy table in sync so the next
+        exec-path refresh or retune doesn't silently revert the adaptation.
+        Returns True when the spec changed (retrace)."""
         spec = self.sites[name]
         if spec.exec_path not in ("ragged", "compact"):
             return False
@@ -168,46 +287,97 @@ class ReuseEngine:
         )
         return True
 
+    # -------------------------------------------------- host-side policy pass
+
     def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
-        """Host-side policy pass: read sim_ema out of the cache, re-decide
-        kernelMode per site (hysteretically — the policy sees the current
-        mode, and a freshly-flipped site is frozen for its tunables'
-        `hysteresis_steps` passes so modes can't oscillate reuse↔basic across
-        consecutive refreshes). Suppressed flips are counted into the site's
-        sensor counters. The same pass re-decides each site's execution
-        substrate (`exec_path`) from its measured tile-skip rate — a site
-        whose stream turns out highly skippable is promoted onto the ragged/
-        compacted tier. Returns the sites whose mode or exec_path changed
-        (both cost a retrace, so callers rebuild the jitted step)."""
-        changed = {}
+        """Host-side policy pass: one BATCHED per-layer decide per site.
+
+        Reads each site's per-layer sim_ema means and its ctrl block
+        (mode_id / sim_threshold / min_work / cooldown arrays), re-decides
+        kernelMode lane-wise (hysteretically: the signal must leave the
+        current mode's band by the layer's margin, and a freshly-flipped lane
+        is frozen for its `hysteresis_steps` passes), and writes the new
+        mode_id/cooldown arrays back into the cache — an array write, NOT a
+        retrace, so distinct layers of one scanned stack settle distinct
+        modes at zero recompile cost. A pass where any lane's wanted flip was
+        cooldown-vetoed bumps the site's `suppressed_flips` counter once.
+        Applied per-layer flips land in `self.last_mode_events` for the
+        controller's journal.
+
+        The same pass re-decides each site's execution substrate
+        (`exec_path`) from its measured tile-skip rate. Exec flips ARE spec
+        changes (the grid geometry is traced), so only they are returned:
+        {site: "exec:<path>"} — callers rebuild the jitted step exactly when
+        this dict is non-empty."""
+        self.last_mode_events = []
         for name, spec in self.sites.items():
-            ema = cache[name]["sim_ema"]
-            ema_val = float(jnp.mean(ema))  # stacked sites: mean over layers
-            cur = self.modes[name]
-            new_mode = self.policy.decide_mode(spec, ema_val, current_mode=cur)
-            if new_mode == cur:
-                self.cooldown[name] = max(0, self.cooldown.get(name, 0) - 1)
+            entry = cache[name]
+            ctrl = entry.get("ctrl")
+            if ctrl is None:
                 continue
-            if self.cooldown.get(name, 0) > 0:
-                self.cooldown[name] -= 1
-                entry = cache[name]
-                if "sensor" in entry:
-                    sensor = dict(entry["sensor"])
-                    sensor["suppressed_flips"] = sensor["suppressed_flips"] + 1
-                    cache[name] = dict(entry, sensor=sensor)
-                continue
-            self.modes[name] = new_mode
-            changed[name] = new_mode
-            self.cooldown[name] = self.policy.resolve(name).hysteresis_steps
-        changed.update(self.refresh_exec_paths(cache))
-        return changed
+            sim = np.asarray(entry["sim_ema"], np.float64)
+            # [L, M] stacked / [M] unstacked / scalar legacy → per-layer [L]
+            sim_l = np.atleast_1d(sim if sim.ndim == 0 else sim.mean(axis=-1))
+            mode_id = self.entry_mode_ids(entry)
+            n_lanes = mode_id.shape[0]
+            if sim_l.shape[0] != n_lanes:
+                sim_l = np.broadcast_to(sim_l, (n_lanes,))
+            thr = np.atleast_1d(np.asarray(ctrl["sim_threshold"], np.float64))
+            mw = np.atleast_1d(np.asarray(ctrl["min_work"], np.float64))
+            cd = np.atleast_1d(np.asarray(ctrl["cooldown"], np.int64))
+            stacked = self.stacking.get(name, 0) > 0
+            ts = [
+                self.policy.resolve(name, layer=layer if stacked else None)
+                for layer in range(n_lanes)
+            ]
+            margin = np.asarray([t.hysteresis_margin for t in ts])
+            hyst = np.asarray([t.hysteresis_steps for t in ts])
+            want = self.policy.decide_modes(
+                spec, sim_l, mode_id, thr, mw, hysteresis_margin=margin
+            )
+            flip = want != mode_id
+            vetoed = flip & (cd > 0)
+            applied = flip & ~vetoed
+            new_mode = np.where(applied, want, mode_id)
+            new_cd = np.where(applied, hyst, np.maximum(cd - 1, 0))
+            if vetoed.any() and "sensor" in entry:
+                sensor = dict(entry["sensor"])
+                sensor["suppressed_flips"] = sensor["suppressed_flips"] + 1
+                entry = dict(entry, sensor=sensor)
+            for lane in np.nonzero(applied)[0]:
+                self.last_mode_events.append({
+                    "site": name,
+                    "layer": int(lane) if stacked else None,
+                    "before": mode_name(mode_id[lane]),
+                    "after": mode_name(new_mode[lane]),
+                    "sim_ema": float(sim_l[lane]),
+                })
+            if applied.any():
+                # any-flip-freezes-the-site: a mode flip also holds the
+                # site's exec substrate still for the cooldown (the exec
+                # loop reciprocates by freezing mode lanes) — churn in one
+                # control dimension must not compound with the other
+                self.exec_cooldown[name] = max(
+                    self.exec_cooldown.get(name, 0),
+                    int(hyst[applied].max()),
+                )
+            shape = np.shape(np.asarray(ctrl["mode_id"]))
+            entry = dict(entry, ctrl=dict(
+                ctrl,
+                mode_id=jnp.asarray(
+                    new_mode.reshape(shape), jnp.int8),
+                cooldown=jnp.asarray(
+                    new_cd.reshape(shape), jnp.int32),
+            ))
+            cache[name] = entry
+        return self.refresh_exec_paths(cache)
 
     def refresh_exec_paths(self, cache: dict[str, Any]) -> dict[str, str]:
         """Promote/demote execution substrates from MEASURED skip rates.
 
-        Cumulative tile counters smooth the signal, and exec flips share the
-        mode-flip cooldown (each one retraces the step, so a site frozen
-        after any flip stays frozen here too); a site with no measured reuse
+        Cumulative tile counters smooth the signal; exec flips carry their
+        own site-level cooldown (each one retraces the step — unlike mode
+        flips, which are ctrl-array writes); a site with no measured reuse
         evaluations keeps its current path. Caveat: after a live block_k
         change (apply_tunables) the cumulative rate mixes tile units across
         granularities and converges to the new regime only asymptotically —
@@ -231,8 +401,11 @@ class ReuseEngine:
                 spec, skipped / total, impl=self.impl
             )
             if new_path == resolve_exec_path(spec, self.impl):
+                self.exec_cooldown[name] = max(
+                    0, self.exec_cooldown.get(name, 0) - 1)
                 continue
-            if self.cooldown.get(name, 0) > 0:
+            if self.exec_cooldown.get(name, 0) > 0:
+                self.exec_cooldown[name] -= 1
                 continue
             gk = -(-spec.in_features // spec.block_k)
             budget = None
@@ -244,7 +417,18 @@ class ReuseEngine:
                 spec, exec_path=new_path, max_active_k=budget
             )
             changed[name] = f"exec:{new_path}"
-            self.cooldown[name] = self.policy.resolve(name).hysteresis_steps
+            hyst = self.policy.resolve(name).hysteresis_steps
+            self.exec_cooldown[name] = hyst
+            # the reciprocal freeze: an exec flip (a retrace) also holds the
+            # site's mode lanes still for the cooldown
+            entry = cache[name]
+            if "ctrl" in entry:
+                ctrl = entry["ctrl"]
+                cache[name] = dict(entry, ctrl=dict(
+                    ctrl,
+                    cooldown=jnp.maximum(
+                        ctrl["cooldown"], jnp.int32(hyst)),
+                ))
         return changed
 
     def sensor_report(self, cache: dict[str, Any]):

@@ -17,10 +17,21 @@ The paper's constants are one global operating point, but the measured data
 granularity differ per layer. `SiteTunables` is the per-site override record:
 the policy resolves a site name to its tunables (falling back to the global
 defaults), and `repro.tune` fits tables of them from recorded sensor traces.
-Because a mode flip costs a recompile, the tunables also carry hysteresis: a
-similarity band (`hysteresis_margin`) the signal must cross before leaving
-the current mode, and a cooldown (`hysteresis_steps`, in refresh passes)
-during which `ReuseEngine.refresh_modes` suppresses flip-backs.
+The tunables also carry hysteresis: a similarity band (`hysteresis_margin`)
+the signal must cross before leaving the current mode, and a cooldown
+(`hysteresis_steps`, in refresh passes) during which
+`ReuseEngine.refresh_modes` suppresses flip-backs.
+
+kernelMode itself is ARRAY-RESIDENT: a site's per-layer mode ids live in the
+ctrl block of its cache entry (int8 [L], `MODE_REUSE`/`MODE_BASIC`), sliced
+by the same lax.scan that slices the rest of the cache and branched on with
+lax.cond inside the layer body — so a 40-layer stack can run dissimilar early
+layers basic and similar late layers in reuse mode simultaneously, and a mode
+flip is an array write between steps, not a retrace (only spec-level changes
+— block_k / exec_path / max_active_k — rebuild the jitted step). The
+host-side decision pass is :meth:`ReusePolicy.decide_modes`, the vectorized
+per-layer form of `decide_mode`; per-layer tunables rows use `"site@layer"`
+table keys (see :func:`layer_key`).
 """
 
 from __future__ import annotations
@@ -28,6 +39,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Any, Mapping
+
+import numpy as np
 
 from repro.core.reuse_cache import ReuseSiteSpec, default_exec_path
 
@@ -47,6 +60,32 @@ RAGGED_BREAK_EVEN_SKIP = 0.25
 RAGGED_BUDGET_HEADROOM = 1.25
 
 EXEC_PATHS = ("kernel", "ragged", "compact", "dense")
+
+# kernelMode encoding inside the array-resident control block (the ctrl dict
+# that rides in every cache entry): int8 so a whole stacked site's per-layer
+# modes are one tiny [L] lane, branched on with lax.cond inside the scanned
+# layer body — a flip is an array write, never a retrace.
+MODE_BASIC = 0
+MODE_REUSE = 1
+
+
+def mode_name(mode_id: int) -> str:
+    return "reuse" if int(mode_id) > 0 else "basic"
+
+
+def layer_key(site: str, layer: int) -> str:
+    """Table key of one layer's tunables row ("site@layer"). Site names never
+    contain '@', so layer rows can share the flat {name: SiteTunables} table
+    (and its JSON serialization) with the site-level rows."""
+    return f"{site}@{layer}"
+
+
+def split_layer_key(key: str) -> tuple[str, int | None]:
+    """Inverse of :func:`layer_key`: ("site", layer) or ("site", None)."""
+    site, sep, layer = key.rpartition("@")
+    if sep and layer.isdigit():
+        return site, int(layer)
+    return key, None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +142,19 @@ class ReusePolicy:
         default_factory=dict
     )
 
-    def resolve(self, site: str) -> SiteTunables:
-        """Tunables governing one site: its table entry, else the defaults."""
+    def resolve(self, site: str, layer: int | None = None) -> SiteTunables:
+        """Tunables governing one site: its table entry, else the defaults.
+
+        With `layer` given, a per-layer row (`"site@layer"` key — the fitter
+        emits them from per-layer trace rows, the online retuner from
+        per-layer windows) wins over the site-level entry. Layer rows only
+        carry the array-resident knobs (sim_threshold / min_work /
+        hysteresis); spec-level fields (block_k, exec_path, max_active_k) stay
+        site-granular because they are baked into the traced dispatch."""
+        if layer is not None:
+            t = self.site_tunables.get(layer_key(site, layer))
+            if t is not None:
+                return t
         t = self.site_tunables.get(site)
         if t is not None:
             return t
@@ -137,6 +187,37 @@ class ReusePolicy:
         elif current_mode == "basic":
             threshold += t.hysteresis_margin
         return "reuse" if sim_ema >= threshold else "basic"
+
+    def decide_modes(
+        self,
+        spec: ReuseSiteSpec,
+        sim_ema: np.ndarray,        # [L] per-layer mean similarity
+        mode_id: np.ndarray,        # [L] current mode ids (MODE_REUSE/BASIC)
+        sim_threshold: np.ndarray,  # [L] live thresholds (ctrl block)
+        min_work: np.ndarray,       # [L] live min-work floors (ctrl block)
+        *,
+        hysteresis_margin: np.ndarray,  # [L]
+    ) -> np.ndarray:
+        """Vectorized decide_mode over the layer axis of one site.
+
+        Same semantics as the scalar path, applied lane-wise: a layer runs in
+        reuse mode iff its work clears its min_work floor AND its sim_ema
+        clears its threshold — hysteretically, the signal must leave the
+        current mode's band by the margin. Returns the WANTED mode ids [L];
+        the engine's refresh owns cooldown vetoes and the actual write."""
+        if spec.mode in ("reuse", "basic"):  # explicit kernelMode wins
+            pinned = MODE_REUSE if spec.mode == "reuse" else MODE_BASIC
+            return np.full_like(np.asarray(mode_id), pinned)
+        work = 2.0 * spec.in_features * spec.out_features
+        thr = np.where(
+            mode_id > 0,
+            sim_threshold - hysteresis_margin,
+            sim_threshold + hysteresis_margin,
+        )
+        want = np.where(sim_ema >= thr, MODE_REUSE, MODE_BASIC)
+        return np.where(work < min_work, MODE_BASIC, want).astype(
+            np.asarray(mode_id).dtype
+        )
 
     def resolve_block_k(self, site: str, default: int) -> int:
         bk = self.resolve(site).block_k

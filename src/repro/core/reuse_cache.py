@@ -14,11 +14,22 @@ Here each *reuse site* (one linear op in the network) owns a cache entry:
     sensor   : dict          — measured reuse-accounting counters (see
                                repro.sensor.counters); ride here so they stay
                                jit/donate/shard-friendly with the rest
+    ctrl     : dict          — the ARRAY-RESIDENT control block (see
+                               init_site_ctrl): per-layer kernelMode id, live
+                               sim_threshold / min_work operating point,
+                               flip cooldown and budget-occupancy EMA
 
 Caches are a plain pytree threaded through `serve_step` exactly like a KV
 cache, so they shard, donate, and checkpoint with the rest of the state. M is
 the (fixed) serving batch; per-slot streams are compared against their own
 previous evaluation, matching the paper's "consecutive evaluations of a layer".
+
+Sites used inside scan-over-layers get a leading layer dimension on EVERY
+leaf (ReuseEngine.init_cache broadcasts), so the scan that slices prev_q/
+prev_out for layer l slices that layer's ctrl lane too: the traced layer body
+reads its own mode id (a scalar inside the scan) and branches with lax.cond —
+per-layer kernelMode with one trace. Unstacked sites are the L=1 degenerate
+case: same leaves, no leading axis.
 """
 
 from __future__ import annotations
@@ -72,7 +83,46 @@ def resolve_exec_path(spec: ReuseSiteSpec, impl: str) -> str:
     return spec.exec_path
 
 
-def init_site_cache(spec: ReuseSiteSpec, batch: int) -> dict[str, jax.Array]:
+def init_site_ctrl(spec: ReuseSiteSpec, tunables=None) -> dict[str, jax.Array]:
+    """Fresh control block for one site (one layer's worth; the engine's
+    init_cache broadcasts it to [L] for stacked sites and overwrites lanes
+    from per-layer tunables rows).
+
+        mode_id       : int8   — kernelMode (MODE_REUSE/MODE_BASIC); the
+                                 traced dispatch lax.cond's on it per layer
+        sim_threshold : f32    — live admission threshold the refresh reads
+        min_work      : f32    — live min-work floor the refresh reads
+        cooldown      : int32  — flip-cooldown passes left for this layer
+        occupancy     : f32    — EMA of the live (computed) tile fraction per
+                                 evaluation — the per-layer budget-occupancy
+                                 signal the budget adapter consults
+
+    Start optimistic (the paper's default is reuse-on) unless the spec pins
+    kernelMode explicitly; the policy may demote per layer.
+    """
+    # lazy import: policy.py imports this module at load time
+    from repro.core.policy import (
+        DEFAULT_MIN_WORK_FLOPS,
+        DEFAULT_SIM_THRESHOLD,
+    )
+
+    mode0 = 0 if spec.mode == "basic" else 1
+    thr = (tunables.sim_threshold if tunables is not None
+           else DEFAULT_SIM_THRESHOLD)
+    mw = (tunables.min_work_flops if tunables is not None
+          else DEFAULT_MIN_WORK_FLOPS)
+    return {
+        "mode_id": jnp.asarray(mode0, dtype=jnp.int8),
+        "sim_threshold": jnp.asarray(thr, dtype=jnp.float32),
+        "min_work": jnp.asarray(mw, dtype=jnp.float32),
+        "cooldown": jnp.zeros((), dtype=jnp.int32),
+        "occupancy": jnp.ones((), dtype=jnp.float32),
+    }
+
+
+def init_site_cache(
+    spec: ReuseSiteSpec, batch: int, tunables=None
+) -> dict[str, jax.Array]:
     from repro.sensor.counters import init_site_counters
 
     return {
@@ -82,6 +132,7 @@ def init_site_cache(spec: ReuseSiteSpec, batch: int) -> dict[str, jax.Array]:
         "sim_ema": jnp.zeros((batch,), dtype=jnp.float32),
         "steps": jnp.zeros((), dtype=jnp.int32),
         "sensor": init_site_counters(batch),
+        "ctrl": init_site_ctrl(spec, tunables),
     }
 
 

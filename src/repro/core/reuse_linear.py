@@ -14,6 +14,14 @@ Reuse is an *inference* feature (the paper's setting): models enable it on
 decode-step linear sites, where M = serving batch and the GEMM is deeply
 memory-bound — precisely where skipping weight-tile DMAs pays.
 
+kernelMode dispatch is ARRAY-RESIDENT: with `mode=None` (the engine's default)
+the call branches with `lax.cond` on the cache entry's per-layer control block
+(`cache["ctrl"]["mode_id"]`), so a scanned stack slices a per-layer mode out
+of the cache exactly like it slices prev_q — one trace covers both modes for
+every layer, and a host-side mode flip is an array write, never a retrace. A
+string `mode` ("reuse" | "basic") keeps the static single-branch dispatch for
+explicitly pinned sites, tests and benchmarks.
+
 `impl` selects the execution substrate:
     "jnp"              — pure-jnp semantics (fast on CPU; what the dry-run lowers)
     "pallas_interpret" — the real kernels, interpreted on CPU (tests)
@@ -70,6 +78,143 @@ def _encode(
                          skip_fraction=skip)
 
 
+def _basic_eval(
+    xm: jax.Array, w: jax.Array, cache: dict[str, jax.Array],
+    spec: ReuseSiteSpec, ema_decay: float,
+):
+    """ReuseSensor+ReuseOFF: the generated basic kernel (Fig. 7-A) — plain
+    quantized GEMM, no delta/cache bookkeeping beyond refreshing state."""
+    m, k = xm.shape
+    n = w.shape[-1]
+    cur_q = quantize_int8(xm, cache["scale"])
+    out = jnp.dot(
+        dequantize_int8(cur_q, cache["scale"], dtype=xm.dtype),
+        w,
+        preferred_element_type=jnp.float32,
+    )
+    row_sim = row_code_similarity(cur_q, cache["prev_q"])
+    sim = jnp.mean(row_sim)
+    new_cache = dict(
+        cache,
+        prev_q=cur_q,
+        prev_out=out,
+        sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
+        steps=cache["steps"] + 1,
+    )
+    if "sensor" in cache:
+        new_cache["sensor"] = update_on_basic(
+            cache["sensor"], row_sim=row_sim, m=m, k=k, n=n,
+            gn=-(-n // spec.block_n),
+            block_m=spec.block_m, block_k=spec.block_k,
+            w_itemsize=w.dtype.itemsize,
+        )
+    stats = ReuseStats(similarity=sim,
+                       skip_fraction=jnp.zeros((), jnp.float32))
+    return out, new_cache, stats
+
+
+def _reuse_eval(
+    xm: jax.Array, w: jax.Array, cache: dict[str, jax.Array],
+    spec: ReuseSiteSpec, impl: str, ema_decay: float,
+):
+    """ReuseSensor+ReuseON: delta-encode against the previous evaluation and
+    run the ΔW GEMM on the spec's execution substrate."""
+    n = w.shape[-1]
+    enc = _encode(xm, cache, spec, w.dtype, impl)
+    path = resolve_exec_path(spec, impl)
+    gm, gk = enc.block_mask.shape
+    gn = -(-n // spec.block_n)
+    interpret = impl != "pallas"
+    sel = None
+    dma_issued = None
+    grid_steps = None
+    overflow = None
+    if path == "dense":
+        out = ops.reuse_matmul_ref(
+            enc.delta, w, cache["prev_out"], enc.block_mask,
+            spec.block_m, spec.block_k,
+        )
+    elif path == "compact":
+        k_mask = jnp.max(enc.block_mask, axis=0)
+        out = ops.reuse_matmul_compact(
+            enc.delta, w, cache["prev_out"], k_mask,
+            block_k=spec.block_k, max_blocks=spec.max_active_k,
+        )
+        # The gather streams each live K-block's weight panel once,
+        # shared across all rows.
+        dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn
+        grid_steps = ops.ragged_grid_steps(
+            jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
+            gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+        )
+        overflow = ops.budget_overflow(
+            jnp.sum(k_mask), gk=gk, max_active_k=spec.max_active_k
+        )
+    elif path == "ragged":
+        idx, counts = ops.compact_rows(enc.block_mask)
+        out = ops.reuse_matmul_ragged(
+            enc.delta, w, cache["prev_out"], enc.block_mask,
+            block_m=spec.block_m, block_n=spec.block_n,
+            block_k=spec.block_k, max_active_k=spec.max_active_k,
+            interpret=interpret, compacted=(idx, counts),
+        )
+        dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
+        grid_steps = ops.ragged_grid_steps(
+            counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+        )
+        overflow = ops.budget_overflow(
+            counts, gk=gk, max_active_k=spec.max_active_k
+        )
+    elif path == "kernel":
+        sel = ops.skip_sel(enc.block_mask)
+        out = ops.reuse_matmul(
+            enc.delta, w, cache["prev_out"], enc.block_mask,
+            block_m=spec.block_m, block_n=spec.block_n,
+            block_k=spec.block_k,
+            dataflow=spec.dataflow,
+            interpret=interpret, sel=sel,
+        )
+    else:
+        raise ValueError(
+            f"unknown exec_path {path!r} for site {spec.name!r}"
+        )
+    row_sim = row_code_similarity(enc.cur_q, cache["prev_q"])
+    sim = jnp.mean(row_sim)
+    new_cache = dict(
+        cache,
+        prev_q=enc.cur_q,
+        prev_out=out,
+        sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
+        steps=cache["steps"] + 1,
+    )
+    if "ctrl" in cache:
+        # Per-layer budget occupancy: EMA of the live-tile fraction this
+        # evaluation — the signal the budget adapter reads per layer.
+        live = jnp.mean(enc.block_mask.astype(jnp.float32))
+        new_cache["ctrl"] = dict(
+            cache["ctrl"],
+            occupancy=ema_update(cache["ctrl"]["occupancy"], live, ema_decay),
+        )
+    if "sensor" in cache:
+        if dma_issued is None:  # kernel/dense: masked full-grid semantics
+            dma_issued = ops.weight_dma_tiles(
+                enc.block_mask, gn=gn, dataflow=spec.dataflow, sel=sel,
+            )
+        new_cache["sensor"] = update_on_reuse(
+            cache["sensor"], block_mask=enc.block_mask, row_sim=row_sim,
+            block_m=spec.block_m, block_k=spec.block_k, n=n, gn=gn,
+            w_itemsize=w.dtype.itemsize,
+            dma_issued=dma_issued,
+            grid_steps=grid_steps,
+            overflow=overflow,
+        )
+    stats = ReuseStats(
+        similarity=sim,
+        skip_fraction=enc.skip_fraction.astype(jnp.float32),
+    )
+    return out, new_cache, stats
+
+
 def reuse_linear(
     x: jax.Array,                       # [..., K]
     w: jax.Array,                       # [K, N]
@@ -77,7 +222,7 @@ def reuse_linear(
     cache: dict[str, jax.Array],
     spec: ReuseSiteSpec,
     *,
-    mode: str = "reuse",                # "reuse" | "basic"  (kernelMode flag)
+    mode: str | None = "reuse",         # "reuse" | "basic" | None (= ctrl)
     impl: str = "jnp",
     ema_decay: float = 0.9,
 ) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
@@ -89,113 +234,26 @@ def reuse_linear(
     assert cache["prev_q"].shape == (m, k), (cache["prev_q"].shape, (m, k))
 
     if mode == "basic":
-        # ReuseSensor+ReuseOFF: the generated basic kernel (Fig. 7-A) — plain
-        # quantized GEMM, no delta/cache bookkeeping beyond refreshing state.
-        cur_q = quantize_int8(xm, cache["scale"])
-        out = jnp.dot(
-            dequantize_int8(cur_q, cache["scale"], dtype=xm.dtype),
-            w,
-            preferred_element_type=jnp.float32,
-        )
-        row_sim = row_code_similarity(cur_q, cache["prev_q"])
-        sim = jnp.mean(row_sim)
-        new_cache = dict(
-            cache,
-            prev_q=cur_q,
-            prev_out=out,
-            sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
-            steps=cache["steps"] + 1,
-        )
-        if "sensor" in cache:
-            new_cache["sensor"] = update_on_basic(
-                cache["sensor"], row_sim=row_sim, m=m, k=k, n=n,
-                gn=-(-n // spec.block_n),
-                block_m=spec.block_m, block_k=spec.block_k,
-                w_itemsize=w.dtype.itemsize,
-            )
-        stats = ReuseStats(similarity=sim, skip_fraction=jnp.zeros(()))
+        out, new_cache, stats = _basic_eval(xm, w, cache, spec, ema_decay)
     elif mode == "reuse":
-        enc = _encode(xm, cache, spec, w.dtype, impl)
-        path = resolve_exec_path(spec, impl)
-        gm, gk = enc.block_mask.shape
-        gn = -(-n // spec.block_n)
-        interpret = impl != "pallas"
-        sel = None
-        dma_issued = None
-        grid_steps = None
-        overflow = None
-        if path == "dense":
-            out = ops.reuse_matmul_ref(
-                enc.delta, w, cache["prev_out"], enc.block_mask,
-                spec.block_m, spec.block_k,
-            )
-        elif path == "compact":
-            k_mask = jnp.max(enc.block_mask, axis=0)
-            out = ops.reuse_matmul_compact(
-                enc.delta, w, cache["prev_out"], k_mask,
-                block_k=spec.block_k, max_blocks=spec.max_active_k,
-            )
-            # The gather streams each live K-block's weight panel once,
-            # shared across all rows.
-            dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn
-            grid_steps = ops.ragged_grid_steps(
-                jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
-                gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
-            )
-            overflow = ops.budget_overflow(
-                jnp.sum(k_mask), gk=gk, max_active_k=spec.max_active_k
-            )
-        elif path == "ragged":
-            idx, counts = ops.compact_rows(enc.block_mask)
-            out = ops.reuse_matmul_ragged(
-                enc.delta, w, cache["prev_out"], enc.block_mask,
-                block_m=spec.block_m, block_n=spec.block_n,
-                block_k=spec.block_k, max_active_k=spec.max_active_k,
-                interpret=interpret, compacted=(idx, counts),
-            )
-            dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
-            grid_steps = ops.ragged_grid_steps(
-                counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
-            )
-            overflow = ops.budget_overflow(
-                counts, gk=gk, max_active_k=spec.max_active_k
-            )
-        elif path == "kernel":
-            sel = ops.skip_sel(enc.block_mask)
-            out = ops.reuse_matmul(
-                enc.delta, w, cache["prev_out"], enc.block_mask,
-                block_m=spec.block_m, block_n=spec.block_n,
-                block_k=spec.block_k,
-                dataflow=spec.dataflow,
-                interpret=interpret, sel=sel,
-            )
-        else:
+        out, new_cache, stats = _reuse_eval(xm, w, cache, spec, impl,
+                                            ema_decay)
+    elif mode is None:
+        # Array-resident kernelMode: branch on this layer's ctrl lane. Both
+        # branches trace once (identical cache/stats structure); at runtime
+        # the HLO conditional executes exactly one — so a host-side per-layer
+        # flip between steps changes which branch runs without retracing.
+        ctrl = cache.get("ctrl")
+        if ctrl is None:
             raise ValueError(
-                f"unknown exec_path {path!r} for site {spec.name!r}"
+                f"site {spec.name!r}: mode=None needs a ctrl block in the "
+                "cache entry (engine.init_cache creates it)"
             )
-        row_sim = row_code_similarity(enc.cur_q, cache["prev_q"])
-        sim = jnp.mean(row_sim)
-        new_cache = dict(
-            cache,
-            prev_q=enc.cur_q,
-            prev_out=out,
-            sim_ema=ema_update(cache["sim_ema"], row_sim, ema_decay),
-            steps=cache["steps"] + 1,
+        out, new_cache, stats = jax.lax.cond(
+            ctrl["mode_id"] > 0,
+            lambda: _reuse_eval(xm, w, cache, spec, impl, ema_decay),
+            lambda: _basic_eval(xm, w, cache, spec, ema_decay),
         )
-        if "sensor" in cache:
-            if dma_issued is None:  # kernel/dense: masked full-grid semantics
-                dma_issued = ops.weight_dma_tiles(
-                    enc.block_mask, gn=gn, dataflow=spec.dataflow, sel=sel,
-                )
-            new_cache["sensor"] = update_on_reuse(
-                cache["sensor"], block_mask=enc.block_mask, row_sim=row_sim,
-                block_m=spec.block_m, block_k=spec.block_k, n=n, gn=gn,
-                w_itemsize=w.dtype.itemsize,
-                dma_issued=dma_issued,
-                grid_steps=grid_steps,
-                overflow=overflow,
-            )
-        stats = ReuseStats(similarity=sim, skip_fraction=enc.skip_fraction)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -224,11 +224,20 @@ def main() -> None:
             nonlocal decode_jit
             if step_idx % args.refresh_every == 0:
                 changed = engine.refresh_modes(sstate["rcache"])
+                if engine.last_mode_events:
+                    # per-layer kernelMode flips are ctrl-array writes — the
+                    # traced step branches on the cache, so NO rebuild here
+                    flips = ", ".join(
+                        f"{e['site']}"
+                        + (f"@{e['layer']}" if e["layer"] is not None else "")
+                        + f"->{e['after']}"
+                        for e in engine.last_mode_events)
+                    print(f"mode refresh @step {step_idx}: {flips}")
                 if changed:
-                    # engine.modes is baked into the traced step — a flip
-                    # means a fresh trace (the paper's CRS re-invocation)
+                    # exec-path flips ARE spec changes baked into the traced
+                    # step — a fresh trace (the paper's CRS re-invocation)
                     decode_jit = jit_decode_factory()
-                    print(f"policy refresh @step {step_idx}: {changed}")
+                    print(f"exec refresh @step {step_idx}: {changed}")
 
     predict_sim_fn = None
     on_place = None

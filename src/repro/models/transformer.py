@@ -14,6 +14,14 @@ repeating group of layers — and the model scans over stacked superblocks:
 Scanning keeps the lowered HLO O(1) in depth (the dry-run compiles one
 superblock body), and per-superblock state (KV caches, SSM states, reuse
 caches) is sliced by the same scan.
+
+Per-layer reuse control rides that slicing: every reuse-cache entry carries
+an array-resident ctrl block (per-layer kernelMode ids, live thresholds,
+budget occupancy — see repro.core.reuse_cache), so the scan that hands the
+superblock body its layer's prev_q/prev_out hands it that layer's control
+lane too. The layer body branches on the sliced mode id with lax.cond inside
+reuse_linear — a deep stack runs mixed reuse/basic modes in ONE trace, and a
+host-side per-layer mode flip between steps never retraces the scan.
 """
 
 from __future__ import annotations
@@ -350,6 +358,9 @@ def forward(
 
     def body(carry, xs):
         xx = carry
+        # rcache is THIS superblock's slice of every reuse site's cache —
+        # including the ctrl lane whose mode id the reuse dispatch branches
+        # on, so kernelMode is per-layer inside the scan
         bp, bst, rcache = xs
         rctx = None
         if reuse_engine is not None and rcache is not None:

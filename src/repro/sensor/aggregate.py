@@ -32,7 +32,11 @@ import numpy as np
 #   4 — adds overflow_fallbacks (evaluations whose live tile count overflowed
 #       the compacted-path budget and took the full-extent fallback); v3
 #       traces still load with the field defaulted to 0
-SENSOR_SCHEMA_VERSION = 4
+#   5 — per-layer kernelMode truth: layer rows carry THAT LAYER's mode from
+#       the array-resident ctrl block (site rows say "mixed" when a stack
+#       settled distinct per-layer modes) plus budget_occupancy (the ctrl
+#       block's live-tile-fraction EMA); v2-v4 traces still load
+SENSOR_SCHEMA_VERSION = 5
 
 
 @dataclasses.dataclass
@@ -64,6 +68,9 @@ class SiteSensor:
     overflow_fallbacks: int = 0
     # Execution substrate the site is currently dispatched on.
     exec_path: str = "auto"
+    # Live-tile-fraction EMA from the ctrl block (per-layer budget occupancy;
+    # 1.0 = every K-block churns every step — nothing for a budget to save).
+    budget_occupancy: float = 0.0
     # Site geometry — what the tune fitter needs to model bookkeeping cost
     # and pick a block_k without re-deriving the model architecture.
     in_features: int = 0
@@ -176,12 +183,16 @@ class SensorReport:
                 f.write(json.dumps(row) + "\n")
 
 
-def _entry_rows(name: str, mode: str, entry: dict, spec=None,
+def _entry_rows(name: str, entry: dict, spec=None,
                 impl: str = "jnp") -> list[SiteSensor]:
     """One SiteSensor per leading-layer slice of a cache entry's counters.
 
-    The emitted exec_path is the RESOLVED substrate ("auto" mapped through
-    the impl), so offline trace consumers see the path that actually ran."""
+    Each layer row's kernelMode is THAT LAYER's lane of the array-resident
+    ctrl block — a stack that settled mixed modes reports them truthfully,
+    not one site-wide compromise string. The emitted exec_path is the
+    RESOLVED substrate ("auto" mapped through the impl), so offline trace
+    consumers see the path that actually ran."""
+    from repro.core.policy import mode_name
     from repro.core.reuse_cache import resolve_exec_path
     sensor = entry["sensor"]
     skipped = np.asarray(sensor["skipped_tiles"])
@@ -192,6 +203,14 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None,
         a = np.asarray(sensor[key])
         return a[layer] if stacked else a
 
+    ctrl = entry.get("ctrl")
+    if ctrl is not None:
+        mode_ids = np.atleast_1d(np.asarray(ctrl["mode_id"]))
+        occupancy = np.atleast_1d(np.asarray(ctrl["occupancy"], np.float64))
+    else:  # legacy entry without a control block
+        mode_ids = np.full((n_layers,), -1)
+        occupancy = np.zeros((n_layers,))
+
     steps = np.asarray(entry["steps"])
     rows = []
     for layer in range(n_layers):
@@ -200,7 +219,8 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None,
         rows.append(SiteSensor(
             site=name,
             layer=layer if stacked else None,
-            mode=mode,
+            mode=(mode_name(mode_ids[layer])
+                  if mode_ids[layer] >= 0 else "auto"),
             steps=int(steps[layer] if stacked and steps.ndim else np.max(steps)),
             skipped_tiles=int(leaf("skipped_tiles", layer)),
             computed_tiles=int(leaf("computed_tiles", layer)),
@@ -220,6 +240,7 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None,
             overflow_fallbacks=int(leaf("overflow_fallbacks", layer))
             if "overflow_fallbacks" in sensor else 0,
             exec_path=resolve_exec_path(spec, impl) if spec else "auto",
+            budget_occupancy=float(occupancy[layer]),
             in_features=spec.in_features if spec else 0,
             out_features=spec.out_features if spec else 0,
             block_m=spec.block_m if spec else 0,
@@ -229,13 +250,16 @@ def _entry_rows(name: str, mode: str, entry: dict, spec=None,
     return rows
 
 
-def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
+def _sum_rows(name: str, rows: list[SiteSensor]) -> SiteSensor:
     hit = np.mean([r.slot_hit_rates for r in rows], axis=0)
     lane_steps = np.max([r.slot_steps for r in rows], axis=0)
+    modes = {r.mode for r in rows}
     return SiteSensor(
         site=name,
         layer=None,
-        mode=mode,
+        # a stack that settled distinct per-layer modes is "mixed" at site
+        # granularity — the per_layer rows carry the lane truth
+        mode=modes.pop() if len(modes) == 1 else "mixed",
         steps=max(r.steps for r in rows),
         skipped_tiles=sum(r.skipped_tiles for r in rows),
         computed_tiles=sum(r.computed_tiles for r in rows),
@@ -255,6 +279,7 @@ def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
         # each layer slice's evaluation falls back independently
         overflow_fallbacks=sum(r.overflow_fallbacks for r in rows),
         exec_path=rows[0].exec_path,
+        budget_occupancy=float(np.mean([r.budget_occupancy for r in rows])),
         in_features=rows[0].in_features,
         out_features=rows[0].out_features,
         block_m=rows[0].block_m,
@@ -265,18 +290,18 @@ def _sum_rows(name: str, mode: str, rows: list[SiteSensor]) -> SiteSensor:
 
 def build_report(engine, cache: dict[str, Any]) -> SensorReport:
     """Reduce a reuse cache's sensor counters. `engine` supplies site specs
-    and current kernelModes (duck-typed: .sites / .modes)."""
+    (duck-typed: .sites / .impl); kernelModes come from each entry's
+    array-resident ctrl block, per layer."""
     per_site, per_layer = [], []
     impl = getattr(engine, "impl", "jnp")
     for name in engine.sites:
         entry = cache[name]
         if "sensor" not in entry:
             continue
-        rows = _entry_rows(name, engine.modes[name], entry,
-                           spec=engine.sites[name], impl=impl)
+        rows = _entry_rows(name, entry, spec=engine.sites[name], impl=impl)
         if rows[0].layer is not None:
             per_layer += rows
-        per_site.append(_sum_rows(name, engine.modes[name], rows))
+        per_site.append(_sum_rows(name, rows))
 
     tot = {
         k: sum(getattr(s, k) for s in per_site)

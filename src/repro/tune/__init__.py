@@ -17,7 +17,7 @@ serialized table feeds back into serving via ``--tuned-policy``:
 * ``table``   — tuned-table JSON serialization + policy construction.
 """
 
-from repro.tune.fit import FitConfig, fit_site, fit_trace
+from repro.tune.fit import FitConfig, fit_layer, fit_site, fit_trace
 from repro.tune.harvest import record_from_sensor, solve_site
 from repro.tune.table import (
     TUNED_TABLE_SCHEMA_VERSION,
@@ -35,6 +35,7 @@ __all__ = [
     "TableSchemaError",
     "Trace",
     "TraceSchemaError",
+    "fit_layer",
     "fit_site",
     "fit_trace",
     "load_table",

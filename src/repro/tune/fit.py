@@ -15,7 +15,9 @@ table out (`python -m repro.tune.fit`).
 
 from __future__ import annotations
 
-from repro.core.policy import SiteTunables
+import dataclasses
+
+from repro.core.policy import SiteTunables, layer_key
 from repro.tune.harvest import (
     BLOCK_K_CHOICES,
     BOOKKEEP_BYTES_PER_MN,
@@ -30,6 +32,7 @@ __all__ = [
     "BOOKKEEP_BYTES_PER_MN",
     "BOOKKEEP_BYTES_PER_XK",
     "FitConfig",
+    "fit_layer",
     "fit_site",
     "fit_trace",
     "summary_lines",
@@ -42,23 +45,54 @@ def fit_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables
     return solve_site(rec, cfg)
 
 
+def fit_layer(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables:
+    """Solve ONE LAYER's tunables row from its per-layer trace slice.
+
+    Same harvest model as the site fit, but spec-level knobs (block_k /
+    exec_path / max_active_k) are stripped: those are baked into the traced
+    dispatch at SITE granularity, while a layer row only drives the
+    array-resident ctrl lanes (sim_threshold / min_work / hysteresis) the
+    engine writes per layer without a retrace."""
+    return dataclasses.replace(
+        solve_site(rec, cfg),
+        block_k=None, exec_path=None, max_active_k=None,
+    )
+
+
 def fit_trace(
-    trace: Trace, cfg: FitConfig = FitConfig()
+    trace: Trace, cfg: FitConfig = FitConfig(), *, per_layer: bool = True
 ) -> dict[str, SiteTunables]:
-    return {name: fit_site(rec, cfg) for name, rec in sorted(trace.sites.items())}
+    """Per-site tunables from a trace; with `per_layer` (default), stacked
+    sites' layer rows additionally fit "site@layer" keyed rows, so a 40-layer
+    stack whose early layers are dissimilar and late layers sticky gets
+    per-layer thresholds instead of one compromise."""
+    table = {
+        name: fit_site(rec, cfg) for name, rec in sorted(trace.sites.items())
+    }
+    if per_layer:
+        for name, by_layer in sorted(trace.layers.items()):
+            if len(by_layer) < 2:
+                continue  # a 1-layer "stack" has nothing layer-specific
+            for layer, rec in sorted(by_layer.items()):
+                table[layer_key(name, layer)] = fit_layer(rec, cfg)
+    return table
 
 
 def summary_lines(
     trace: Trace, tunables: dict[str, SiteTunables]
 ) -> list[str]:
     default = SiteTunables()
+    n_layer_rows = sum(name not in trace.sites for name in tunables)
     lines = [
-        f"fitted {len(tunables)} sites from {trace.n_rows} rows "
+        f"fitted {len(tunables) - n_layer_rows} sites "
+        f"(+{n_layer_rows} per-layer rows) from {trace.n_rows} rows "
         f"({trace.path})",
         f"{'site':24s} {'thr':>6s} {'blk_k':>6s} {'exec':>8s} {'min_work':>10s} "
         f"{'hit':>5s} {'eff':>5s}  vs default",
     ]
     for name, t in tunables.items():
+        if name not in trace.sites:
+            continue  # "site@layer" rows: summarized by the count above
         rec = trace.sites[name]
         diffs = []
         if abs(t.sim_threshold - default.sim_threshold) > 1e-9:
@@ -100,13 +134,17 @@ def main() -> None:
                     help="fit the Pallas compacted-grid path (exec_path="
                     "'ragged') for high-skip sites instead of the jnp "
                     "gather path ('compact', the CPU serving default)")
+    ap.add_argument("--site-only", action="store_true",
+                    help="fit site-granular rows only; by default stacked "
+                    "sites' per-layer trace rows also fit 'site@layer' "
+                    "tunables rows (per-layer ctrl-lane thresholds)")
     args = ap.parse_args()
 
     cfg = FitConfig(safety_margin=args.safety_margin,
                     prior_efficiency=args.prior_efficiency,
                     pallas_target=args.pallas_target)
     trace = load_trace(args.trace)
-    tunables = fit_trace(trace, cfg)
+    tunables = fit_trace(trace, cfg, per_layer=not args.site_only)
     print("\n".join(summary_lines(trace, tunables)))
     save_table(args.out, tunables,
                meta={"trace": args.trace, "n_rows": trace.n_rows})

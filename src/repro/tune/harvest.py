@@ -198,4 +198,6 @@ def record_from_sensor(s, *, mode: str | None = None) -> SiteTraceRecord:
         grid_steps=float(s.grid_steps),
         grid_step_skip_rate=float(s.grid_step_skip_rate),
         overflow_fallbacks=int(getattr(s, "overflow_fallbacks", 0)),
+        layer=getattr(s, "layer", None),
+        budget_occupancy=float(getattr(s, "budget_occupancy", 0.0)),
     )

@@ -28,7 +28,9 @@ class TraceSchemaError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class SiteTraceRecord:
-    """One site's measured operating point over the trace window."""
+    """One site's measured operating point over the trace window (or one
+    LAYER's slice of a stacked site, when `layer` is set — layer rows carry
+    the same counters at per-layer granularity)."""
 
     site: str
     mode: str
@@ -55,6 +57,10 @@ class SiteTraceRecord:
     # Schema-v4 field: evaluations whose live tile count overflowed the
     # compacted-path budget (the lax.cond full-extent fallback fired).
     overflow_fallbacks: int = 0
+    # Schema-v5 fields: which layer of a stacked site this row slices
+    # (None = whole site) and the ctrl block's live-tile-fraction EMA.
+    layer: int | None = None
+    budget_occupancy: float = 0.0
 
     @property
     def work_flops(self) -> float:
@@ -73,12 +79,19 @@ class SiteTraceRecord:
 
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """Parsed trace: last snapshot per site + the last model-level row."""
+    """Parsed trace: last snapshot per site (and per layer) + the last
+    model-level row."""
 
     sites: dict[str, SiteTraceRecord]
     model: dict[str, Any] | None
     n_rows: int
     path: str
+    # {site: {layer: record}} from "layer" rows — stacked sites' per-layer
+    # operating points, which the fitter turns into "site@layer" tunables
+    # rows. Empty for traces recorded from unstacked engines.
+    layers: dict[str, dict[int, SiteTraceRecord]] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 _REQUIRED_SITE_FIELDS = (
@@ -88,10 +101,10 @@ _REQUIRED_SITE_FIELDS = (
 )
 
 
-# v2/v3 rows lack only fields this loader defaults (grid_steps + exec_path on
-# v2, overflow_fallbacks on both), so they stay loadable; v1 (unversioned)
-# rows lack the geometry and are refused.
-SUPPORTED_SCHEMA_VERSIONS = (2, 3, SENSOR_SCHEMA_VERSION)
+# v2-v4 rows lack only fields this loader defaults (grid_steps + exec_path on
+# v2, overflow_fallbacks on v2/v3, budget_occupancy below v5), so they stay
+# loadable; v1 (unversioned) rows lack the geometry and are refused.
+SUPPORTED_SCHEMA_VERSIONS = (2, 3, 4, SENSOR_SCHEMA_VERSION)
 
 
 def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:
@@ -144,6 +157,8 @@ def _site_record(row: dict[str, Any], lineno: int, path: str) -> SiteTraceRecord
         grid_steps=float(row.get("grid_steps", 0.0)),
         grid_step_skip_rate=float(row.get("grid_step_skip_rate", 0.0)),
         overflow_fallbacks=int(row.get("overflow_fallbacks", 0)),
+        layer=row["layer"] if isinstance(row.get("layer"), int) else None,
+        budget_occupancy=float(row.get("budget_occupancy", 0.0)),
     )
 
 
@@ -151,6 +166,7 @@ def load_trace(path: str) -> Trace:
     """Parse a sensor JSONL trace; last row per site wins (cumulative
     counters). Raises TraceSchemaError on version/field mismatch."""
     sites: dict[str, SiteTraceRecord] = {}
+    layers: dict[str, dict[int, SiteTraceRecord]] = {}
     model: dict[str, Any] | None = None
     n_rows = 0
     with open(path) as f:
@@ -168,9 +184,15 @@ def load_trace(path: str) -> Trace:
             if kind == "site":
                 rec = _site_record(row, lineno, path)
                 sites[rec.site] = rec
+            elif kind == "layer":
+                # stacked sites' per-layer slices — the per-layer fitter's
+                # input (last row per (site, layer) wins, like site rows)
+                rec = _site_record(row, lineno, path)
+                if rec.layer is not None:
+                    layers.setdefault(rec.site, {})[rec.layer] = rec
             elif kind == "model":
                 model = row
-            # "layer" rows are site-slices; the fitter works at site level.
     if not sites:
         raise TraceSchemaError(f"{path}: no site rows found")
-    return Trace(sites=sites, model=model, n_rows=n_rows, path=path)
+    return Trace(sites=sites, model=model, n_rows=n_rows, path=path,
+                 layers=layers)

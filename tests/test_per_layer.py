@@ -1,0 +1,265 @@
+"""Array-resident per-layer control block (ISSUE 5 acceptance).
+
+Load-bearing properties:
+
+* closed loop on a bimodal stacked stream (dissimilar early layers, sticky
+  late layers): `refresh_modes` settles DISTINCT modes for distinct layers of
+  the SAME site, the similar layers' measured mac_skip beats the single-mode
+  compromise baseline, outputs stay bitwise-exact vs the dense (basic-kernel)
+  oracle, and the mode flips never rebuild the jitted scan step — only
+  spec-level changes (block_k / exec_path) signal a retrace;
+* per-layer hysteresis cannot oscillate: lanes hovering inside the band
+  don't flip, and a lane's immediate flip-back is cooldown-vetoed
+  (counted in suppressed_flips);
+* slot recycling resets the per-layer sensor lanes of a stacked site;
+* the controller journals layer-scoped decisions for stacked sites and the
+  journal replays consistently (repro.control.replay).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ReuseEngine, ReusePolicy, SiteTunables
+from repro.serve.scheduler import reset_slot
+
+L, M, K, N = 4, 4, 128, 64
+SIMILAR = (2, 3)     # late layers: identical input every step
+DISSIMILAR = (0, 1)  # early layers: fresh random codes every step
+
+
+def _bimodal_engine(mode="auto"):
+    """Stacked site with integer-exact quantization (scale 1.0) so reuse
+    telescoping is bitwise against the quantized dense oracle. The exec path
+    is pinned (dense) so the only live decisions are per-layer kernelModes —
+    the object under test."""
+    policy = ReusePolicy(site_tunables={"stack": SiteTunables(
+        sim_threshold=0.6, min_work_flops=0.0, hysteresis_margin=0.05,
+        exec_path="dense",
+    )})
+    eng = ReuseEngine(policy=policy)
+    eng.register("stack", K, N, n_layers=L, block_m=2, block_k=32, mode=mode)
+    eng.sites["stack"] = dataclasses.replace(
+        eng.sites["stack"], fixed_scale=1.0)
+    return eng
+
+
+def _make_step(eng, w):
+    """Jitted scan-over-layers step; counts traces via a Python side effect
+    (incremented only while TRACING, so a cached call adds nothing)."""
+    traces = []
+
+    @jax.jit
+    def step(xs, entry):
+        traces.append(1)
+
+        def body(carry, sl):
+            x_l, e_l = sl
+            out, new_e, _ = eng.apply("stack", x_l, w, None, e_l)
+            return carry, (out, new_e)
+
+        _, (outs, new_entry) = jax.lax.scan(body, 0, (xs, entry))
+        return outs, new_entry
+
+    return step, traces
+
+
+def _bimodal_inputs(rng, t):
+    """[L, M, K] integer-valued stack input: sticky lanes repeat one matrix,
+    dissimilar lanes draw fresh codes every step."""
+    base = np.random.default_rng(12345).integers(-3, 4, size=(M, K))
+    xs = np.zeros((L, M, K), np.float32)
+    for layer in range(L):
+        if layer in SIMILAR:
+            xs[layer] = base
+        else:
+            xs[layer] = rng.integers(-3, 4, size=(M, K))
+    return jnp.asarray(xs)
+
+
+def test_bimodal_stack_settles_mixed_modes_bitwise_exact_no_retrace():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(-2, 3, size=(K, N)).astype(np.float32))
+
+    eng = _bimodal_engine()
+    cache = eng.init_cache(M)
+    step, traces = _make_step(eng, w)
+
+    # dense oracle: the same stream through the basic (quantized dense)
+    # kernel on every layer — the single-mode "reuse off" compromise AND the
+    # exactness reference in one
+    oracle = _bimodal_engine(mode="basic")
+    ocache = oracle.init_cache(M)
+    ostep, _ = _make_step(oracle, w)
+
+    # 20 steps: the sticky lanes' sim EMA must climb from the cold start past
+    # the promotion band (0.6 + 0.05) — the optimistic start demotes at the
+    # first refresh, then the measured similarity re-admits only those lanes
+    for t in range(20):
+        xs = _bimodal_inputs(rng, t)
+        outs, cache["stack"] = step(xs, cache["stack"])
+        oouts, ocache["stack"] = ostep(xs, ocache["stack"])
+        # bitwise: reuse telescoping == quantized dense, every layer, even
+        # while modes are mid-flight mixed
+        np.testing.assert_array_equal(np.asarray(outs), np.asarray(oouts))
+        assert eng.refresh_modes(cache) == {}  # exec pinned: nothing retraces
+
+    # distinct modes for distinct layers of the SAME site
+    modes = eng.layer_modes(cache, "stack")
+    assert [modes[i] for i in SIMILAR] == ["reuse", "reuse"]
+    assert [modes[i] for i in DISSIMILAR] == ["basic", "basic"]
+    assert eng.site_mode(cache, "stack") == "mixed"
+
+    # the single-mode compromise would be BASIC here (mean-over-layers sim
+    # ~0.55 sits under the 0.6 threshold), harvesting nothing; the per-layer
+    # block keeps the sticky layers reusing
+    sim_l = np.asarray(cache["stack"]["sim_ema"]).mean(axis=-1)
+    assert sim_l.mean() < 0.6 < sim_l[list(SIMILAR)].min()
+    report = eng.sensor_report(cache)
+    by_layer = {r.layer: r for r in report.per_layer}
+    base_report = oracle.sensor_report(ocache)
+    for layer in SIMILAR:
+        base_row = {r.layer: r for r in base_report.per_layer}[layer]
+        assert by_layer[layer].mac_skip_rate > base_row.mac_skip_rate
+        assert by_layer[layer].mac_skip_rate > 0.3  # whole-run incl. basic era
+        assert by_layer[layer].mode == "reuse"
+    for layer in DISSIMILAR:
+        assert by_layer[layer].mode == "basic"
+
+    # every mode flip across the whole run was an array write: ONE trace
+    assert len(traces) == 1
+    # ... while a spec-level change (block_k) does signal a retrace
+    assert eng.apply_tunables(
+        "stack",
+        dataclasses.replace(eng.policy.resolve("stack"), block_k=64),
+        cache,
+    )
+
+
+def test_per_layer_hysteresis_cannot_oscillate():
+    eng = ReuseEngine(policy=ReusePolicy(sim_threshold=0.5,
+                                         min_work_flops=0.0,
+                                         hysteresis_margin=0.1))
+    eng.register("s", 256, 128, n_layers=3)
+    cache = eng.init_cache(2)
+    assert eng.layer_modes(cache, "s") == ["reuse"] * 3
+
+    # lanes hovering inside the band (threshold 0.5 ± 0.1): no flip, no veto
+    cache["s"]["sim_ema"] = jnp.broadcast_to(
+        jnp.asarray([0.45, 0.42, 0.48], jnp.float32)[:, None], (3, 2)).copy()
+    for _ in range(3):
+        eng.refresh_modes(cache)
+        assert eng.last_mode_events == []
+    assert eng.layer_modes(cache, "s") == ["reuse"] * 3
+    assert int(jnp.max(cache["s"]["sensor"]["suppressed_flips"])) == 0
+
+    # one lane leaves the band: only that lane flips
+    cache["s"]["sim_ema"] = jnp.broadcast_to(
+        jnp.asarray([0.1, 0.45, 0.45], jnp.float32)[:, None], (3, 2)).copy()
+    eng.refresh_modes(cache)
+    assert [(e["layer"], e["after"]) for e in eng.last_mode_events] == [
+        (0, "basic")]
+    assert eng.layer_modes(cache, "s") == ["basic", "reuse", "reuse"]
+
+    # an immediate want-back on that lane is cooldown-vetoed and counted
+    cache["s"]["sim_ema"] = jnp.broadcast_to(
+        jnp.asarray([0.9, 0.45, 0.45], jnp.float32)[:, None], (3, 2)).copy()
+    eng.refresh_modes(cache)
+    assert eng.last_mode_events == []
+    assert eng.layer_modes(cache, "s")[0] == "basic"
+    assert int(jnp.max(cache["s"]["sensor"]["suppressed_flips"])) == 1
+    # ... and lands once the lane's cooldown drained
+    eng.refresh_modes(cache)
+    assert [(e["layer"], e["after"]) for e in eng.last_mode_events] == [
+        (0, "reuse")]
+
+
+def test_slot_recycle_resets_per_layer_sensor_lanes(rng):
+    eng = ReuseEngine(policy=ReusePolicy(min_work_flops=0.0))
+    eng.register("s", 64, 32, n_layers=2, block_m=2, block_k=32)
+    cache = eng.init_cache(3)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    entry = cache["s"]
+    for _ in range(2):
+        def body(c, sl):
+            x_l, e_l = sl
+            _, ne, _ = eng.apply("s", x_l, w, None, e_l)
+            return c, ne
+
+        xs = jnp.asarray(rng.normal(size=(2, 3, 64)).astype(np.float32))
+        _, entry = jax.lax.scan(body, 0, (xs, entry))
+    cache["s"] = entry
+    before = np.asarray(entry["sensor"]["slot_steps"])
+    assert before.shape == (2, 3) and np.all(before == 2)
+
+    out = reset_slot(cache, slot=1)["s"]
+    # the recycled lane restarts across EVERY layer slice ...
+    assert np.all(np.asarray(out["sensor"]["slot_steps"])[:, 1] == 0)
+    assert np.all(np.asarray(out["sensor"]["slot_hit_sum"])[:, 1] == 0.0)
+    assert np.all(np.asarray(out["sim_ema"])[:, 1] == 0.0)
+    assert np.all(np.asarray(out["prev_q"])[:, 1, :] == 0)
+    # ... other lanes keep their per-layer history
+    assert np.all(np.asarray(out["sensor"]["slot_steps"])[:, [0, 2]] == 2)
+    # the ctrl block is per-LAYER state, not per-slot: recycling keeps it
+    np.testing.assert_array_equal(
+        np.asarray(out["ctrl"]["mode_id"]),
+        np.asarray(cache["s"]["ctrl"]["mode_id"]))
+
+
+def test_controller_journals_layer_scoped_decisions(tmp_path):
+    """Stacked site under the online controller: per-layer windows feed the
+    harvest model, land as 'site@layer' rows (ctrl-lane writes, NO retrace)
+    and journal with a layer; the journal replays consistently."""
+    from repro.control import ControlConfig, Controller, load_journal
+    from repro.control.replay import replay_rows
+
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.integers(-2, 3, size=(K, N)).astype(np.float32))
+    eng = _bimodal_engine()
+    cache = eng.init_cache(M)
+    step, traces = _make_step(eng, w)
+
+    journal = tmp_path / "decisions.jsonl"
+    ctl = Controller(ControlConfig(min_window_steps=2,
+                                   journal_path=str(journal)))
+    reports = []
+    for t in range(1, 11):
+        xs = _bimodal_inputs(rng, t)
+        _, cache["stack"] = step(xs, cache["stack"])
+        if t % 2 == 0:
+            rep = ctl.step(eng, cache, step=t)
+            reports.append(rep)
+            if rep.changed:  # spec-level move (e.g. block_k): rebuild
+                step, traces = _make_step(eng, w)
+    # retraces only ever come from SPEC-level moves — never from a
+    # layer-scoped decision (those are ctrl-array writes)
+    for rep in reports:
+        layer_decided = {d.site for d in rep.decisions
+                         if d.layer is not None and d.kind == "retune"}
+        spec_decided = {d.site for d in rep.decisions
+                        if d.layer is None and d.kind in ("retune", "budget",
+                                                          "exec")}
+        assert set(rep.retrace) <= spec_decided | set(), (
+            rep.retrace, layer_decided)
+
+    rows = load_journal(str(journal))
+    layer_rows = [r for r in rows if r.get("kind") == "decision"
+                  and r.get("layer") is not None]
+    assert layer_rows, "stacked site produced no layer-scoped decisions"
+    assert {r["decision_kind"] for r in layer_rows} >= {"retune"}
+    # per-layer rows landed in the policy table and the ctrl lanes
+    assert any("@" in k for k in eng.policy.site_tunables)
+    thr = np.asarray(cache["stack"]["ctrl"]["sim_threshold"])
+    assert thr.shape == (L,)
+
+    result = replay_rows(rows)
+    assert result.ok, result.summary_lines()
+    assert result.n_layer_scoped == len(layer_rows)
+
+    # a corrupted journal (forged before-value on a knob the trajectory
+    # already visited) is detected
+    forged = dict(layer_rows[0], before="bogus")
+    assert not replay_rows(rows + [forged]).ok

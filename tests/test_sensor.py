@@ -60,7 +60,9 @@ def test_counter_conservation_across_steps_and_modes():
     steps = 0
     for i in range(6):
         mode = "basic" if i == 3 else "reuse"  # mode flip mid-run
-        eng.modes["site"] = mode
+        cache["site"] = entry
+        eng.set_mode(cache, "site", mode)  # ctrl-array write, no retrace
+        entry = cache["site"]
         if i in (2, 4):  # repeat the first k-block => that tile skips
             x = x.at[:, 256:].set(
                 jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32)))

@@ -78,9 +78,9 @@ def test_serve_with_reuse_matches_serve_without(rng):
     outs = {}
     for mode in ("reuse", "basic"):
         engine = build_reuse_engine(cfg, impl="jnp")
-        for name in engine.sites:
-            engine.modes[name] = mode
         rcache = engine.init_cache(b)
+        for name in engine.sites:
+            engine.set_mode(rcache, name, mode)
         state = init_serve_state(cfg, b, cache)
         logits, state = prefill_step(params, cfg, toks, state)
         tok = greedy_sample(logits)
