@@ -2,22 +2,38 @@
 
 from __future__ import annotations
 
-import time
-
 import jax
+
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import Histogram
+
+
+def time_fn_stats(fn, *args, warmup: int = 2, iters: int = 5) -> dict:
+    """Wall-clock stats per call (block_until_ready), in microseconds.
+
+    Samples go through the shared obs Histogram so benchmarks and the serve
+    loop report percentiles from one implementation. Returns
+    {"p50_us", "p95_us", "mean_us", "min_us", "max_us", "count"}."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    h = Histogram("bench_call_us", {})
+    for _ in range(iters):
+        t0 = obs_trace.now()
+        jax.block_until_ready(fn(*args))
+        h.observe((obs_trace.now() - t0) * 1e6)
+    return {
+        "p50_us": h.percentile(0.5),
+        "p95_us": h.percentile(0.95),
+        "mean_us": h.mean,
+        "min_us": h.min,
+        "max_us": h.max,
+        "count": h.count,
+    }
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-clock microseconds per call (block_until_ready)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return time_fn_stats(fn, *args, warmup=warmup, iters=iters)["p50_us"]
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

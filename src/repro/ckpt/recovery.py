@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 import signal
 import statistics
-import time
 from typing import Any, Callable
 
 from repro.ckpt.checkpoint import (
@@ -27,6 +26,7 @@ from repro.ckpt.checkpoint import (
     latest_step,
     restore_checkpoint,
 )
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -92,7 +92,7 @@ class ResilientLoop:
             step = start_step
             retries = 0
             while step < start_step + num_steps:
-                t0 = time.time()
+                t0 = obs_trace.now()  # perf_counter: immune to clock steps
                 try:
                     if fail_injector is not None:
                         fail_injector(step)
@@ -113,7 +113,7 @@ class ResilientLoop:
                         step = last + 1
                     continue
 
-                self._watch_straggler(step, time.time() - t0)
+                self._watch_straggler(step, obs_trace.now() - t0)
                 if on_metrics is not None:
                     on_metrics(step, metrics)
                 if step % self.cfg.ckpt_every == 0 or self._preempted:

@@ -18,7 +18,10 @@ counters directly — no JSONL round trip:
 * :mod:`replay`     — ``python -m repro.control.replay journal.jsonl``:
                       re-applies a journal to a fresh policy state (and,
                       with ``--arch``, a fresh engine) and asserts the
-                      reproduced trajectory matches the recorded one.
+                      reproduced trajectory matches the recorded one;
+* :mod:`restore`    — startup precedence between a checkpointed ctrl block
+                      and the tuned-policy table (checkpoint < table < live),
+                      journaled as kind="restore" decisions.
 
 Serving entry point: ``python -m repro.launch.serve ... --control-every N``.
 """
@@ -34,6 +37,7 @@ from repro.control.report import (
     load_journal,
 )
 from repro.control.replay import ReplayResult, replay_rows
+from repro.control.restore import resolve_restored_ctrl
 from repro.control.retune import (
     bounded_tunables,
     snapshot_entry,
@@ -54,6 +58,7 @@ __all__ = [
     "bounded_tunables",
     "load_journal",
     "replay_rows",
+    "resolve_restored_ctrl",
     "snapshot_entry",
     "window_layer_records",
     "window_record",

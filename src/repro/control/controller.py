@@ -45,7 +45,7 @@ from repro.control.retune import (
 )
 from repro.core.reuse_cache import resolve_exec_path
 from repro.tune.fit import fit_layer
-from repro.tune.harvest import FitConfig, solve_site
+from repro.tune.harvest import FitConfig, measured_latency_note, solve_site
 
 # SiteTunables fields the retuner may move, journaled field-by-field.
 _TUNABLE_FIELDS = (
@@ -94,6 +94,11 @@ class ControlConfig:
     # ignored: the controller derives it from engine.impl each step so pins
     # always match the substrate the engine executes.
     fit: FitConfig = dataclasses.field(default_factory=FitConfig)
+    # Measured per-(site, layer, exec_path) latency table to price retunes
+    # from (an `obs_latency_table` JSON — serve --obs-dir writes one). Loaded
+    # at Controller construction and injected into the harvest model; every
+    # decision it influences carries the measured evidence in its reason.
+    latency_table_path: str | None = None
 
 
 class Controller:
@@ -105,12 +110,18 @@ class Controller:
         *,
         admission: AdmissionPredictor | None = None,
         journal: DecisionJournal | None = None,
+        latency=None,
     ):
         self.config = config
         self.admission = admission
         if journal is None and config.journal_path:
             journal = DecisionJournal(config.journal_path)
         self.journal = journal
+        if latency is None and config.latency_table_path:
+            from repro.obs.latency import load_latency_table
+
+            latency = load_latency_table(config.latency_table_path)
+        self.latency = latency  # obs LatencyTable or None (constant pricing)
         self.reports: list[ControlReport] = []
         self._snaps: dict[str, dict] = {}
         self._clean_windows: dict[str, int] = {}  # per-site fallback-free run
@@ -136,7 +147,9 @@ class Controller:
         # mismatched engine.impl would pin the wrong path — and pins
         # override decide_exec_path unconditionally.
         fit_cfg = dataclasses.replace(
-            cfg.fit, pallas_target=(engine.impl != "jnp")
+            cfg.fit, pallas_target=(engine.impl != "jnp"),
+            latency=self.latency if self.latency is not None else
+            cfg.fit.latency,
         )
 
         for name, spec in list(engine.sites.items()):
@@ -159,9 +172,14 @@ class Controller:
             self._snaps[name] = cur
             windows[name] = rec.steps
 
-            # -- loop 1: online retune through the shared harvest model
+            # -- loop 1: online retune through the shared harvest model.
+            # When a measured latency table covers the site, the solve is
+            # priced from observed wall-clock and the evidence is appended
+            # to every decision it produces.
             current_t = engine.policy.resolve(name)
             target = solve_site(rec, fit_cfg)
+            meas_note = measured_latency_note(rec, fit_cfg)
+            meas_sfx = f" [{meas_note}]" if meas_note else ""
             bounded, reasons = bounded_tunables(
                 current_t, target,
                 current_block_k=spec.block_k,
@@ -194,7 +212,8 @@ class Controller:
                             before=b, after=a,
                             reason=f"window {rec.steps} steps, "
                                    f"hit {rec.hit_rate:.2f}, "
-                                   f"skip {rec.tile_skip_rate:.2f}: {why}",
+                                   f"skip {rec.tile_skip_rate:.2f}: "
+                                   f"{why}{meas_sfx}",
                         ))
 
             # a block_k retune rescales the spec budget (same covered K
@@ -247,12 +266,14 @@ class Controller:
                          if f.startswith(r.split(" ", 1)[0])),
                         "; ".join(reasons_l) or "refit",
                     )
+                    note_l = measured_latency_note(lrec, fit_cfg)
                     decisions.append(Decision(
                         step=step, site=name, kind="retune", field=f,
                         before=b, after=a, layer=lyr,
                         reason=f"layer window {lrec.steps} steps, "
                                f"hit {lrec.hit_rate:.2f}, "
-                               f"skip {lrec.tile_skip_rate:.2f}: {why}",
+                               f"skip {lrec.tile_skip_rate:.2f}: {why}"
+                               + (f" [{note_l}]" if note_l else ""),
                     ))
             if layers_moved:
                 engine._sync_ctrl(name, cache)

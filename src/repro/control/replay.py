@@ -138,7 +138,10 @@ def apply_to_engine(rows: list[dict[str, Any]], engine, cache) -> dict[str, Any]
             engine.set_mode(cache, site, after, layer=layer)
         elif kind == "budget":
             engine.set_budget(site, int(after))
-        elif kind == "retune":
+        elif kind in ("retune", "restore"):
+            # "restore" rows record the startup checkpoint-vs-table
+            # precedence resolution; their `after` is the value that won the
+            # lane, so replaying them is the same table write as a retune.
             t = engine.policy.resolve(site, layer=layer)
             if field in {f.name for f in dataclasses.fields(t)}:
                 t = dataclasses.replace(t, **{field: after})

@@ -19,17 +19,24 @@ from typing import Any
 #   1 — PR 4 emission
 #   2 — decision rows carry `layer` (per-layer ctrl-lane retunes and
 #       per-layer kernelMode flips of stacked sites; null = site-granular)
-CONTROL_JOURNAL_SCHEMA_VERSION = 2
+#   3 — rows carry obs correlation ids under "trace" when the obs plane is
+#       active (run/window/...; absent = pre-obs emission, byte-identical to
+#       v2), and the "restore" decision kind records checkpoint-vs-tuned-table
+#       precedence resolutions at startup
+CONTROL_JOURNAL_SCHEMA_VERSION = 3
+LOADABLE_JOURNAL_VERSIONS = (1, 2, 3)
 
 # Decision kinds: which feedback loop acted.
-#   "retune" — online refit of a SiteTunables knob from windowed counters
-#              (layer set = a "site@layer" ctrl-lane row, no retrace)
-#   "budget" — max_active_k widened/tightened from the overflow-fallback rate
-#   "mode"   — kernelMode flip applied by the hysteretic refresh (an array
-#              write into the ctrl block; layer set for stacked sites)
-#   "exec"   — execution-substrate flip applied by the hysteretic refresh
-#   "admit"  — admission-predictor population estimate moved
-DECISION_KINDS = ("retune", "budget", "mode", "exec", "admit")
+#   "retune"  — online refit of a SiteTunables knob from windowed counters
+#               (layer set = a "site@layer" ctrl-lane row, no retrace)
+#   "budget"  — max_active_k widened/tightened from the overflow-fallback rate
+#   "mode"    — kernelMode flip applied by the hysteretic refresh (an array
+#               write into the ctrl block; layer set for stacked sites)
+#   "exec"    — execution-substrate flip applied by the hysteretic refresh
+#   "admit"   — admission-predictor population estimate moved
+#   "restore" — startup precedence resolution between a checkpointed ctrl
+#               block and the tuned-policy table (checkpoint < table < live)
+DECISION_KINDS = ("retune", "budget", "mode", "exec", "admit", "restore")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +97,11 @@ class ControlReport:
         return lines
 
     def to_dicts(self) -> list[dict[str, Any]]:
-        """JSONL rows: one interval row + one row per decision."""
+        """JSONL rows: one interval row + one row per decision. Rows are
+        stamped with the current obs correlation ids (no-op when the obs
+        plane is inactive — the v2 byte layout is preserved exactly)."""
+        from repro.obs.events import stamp
+
         ver = {"schema_version": CONTROL_JOURNAL_SCHEMA_VERSION}
         ts = time.time()
         rows = [dict(
@@ -101,7 +112,7 @@ class ControlReport:
         rows += [dict(d.to_dict(), kind="decision", decision_kind=d.kind,
                       interval=self.interval, ts=ts, **ver)
                  for d in self.decisions]
-        return rows
+        return [stamp(row) for row in rows]
 
 
 class DecisionJournal:
@@ -119,11 +130,25 @@ class DecisionJournal:
 
 
 def load_journal(path: str) -> list[dict[str, Any]]:
-    """Parse a decision journal back into rows (audit/replay)."""
+    """Parse a decision journal back into rows (audit/replay).
+
+    Loads every journal version this repo has ever emitted
+    (`LOADABLE_JOURNAL_VERSIONS`): v1 rows gain `layer=None`, v1/v2 rows
+    simply lack the v3 `trace` id sub-dict — consumers treat both as
+    optional. Unknown FUTURE versions are rejected loudly."""
     rows = []
     with open(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, start=1):
             line = line.strip()
-            if line:
-                rows.append(json.loads(line))
+            if not line:
+                continue
+            row = json.loads(line)
+            ver = row.get("schema_version")
+            if ver not in LOADABLE_JOURNAL_VERSIONS:
+                raise ValueError(
+                    f"{path}:{lineno}: journal schema_version {ver!r} not in "
+                    f"{LOADABLE_JOURNAL_VERSIONS}")
+            if "layer" not in row and row.get("kind") == "decision":
+                row["layer"] = None  # v1 decisions predate per-layer lanes
+            rows.append(row)
     return rows

@@ -1,0 +1,119 @@
+"""Checkpoint-vs-tuned-table restore precedence for the ctrl block.
+
+A restored serving state carries the array-resident per-layer ctrl block
+(mode_id / sim_threshold / min_work / cooldown / occupancy) from the moment
+the checkpoint was cut — but the process restoring it may ALSO have been
+launched with a tuned-policy table (`--tuned-policy`). Before this module the
+two silently raced: whichever write happened last (`_sync_ctrl` from any
+retune vs the restored arrays) won, so a checkpointed operating point could
+be clobbered back to table values mid-run, or a stale checkpoint could shadow
+a freshly fitted table at startup.
+
+The defined order, enforced here once at restore time:
+
+    checkpointed ctrl  <  tuned table  <  live controller state
+
+* Lanes covered by a tuned-table row (site or "site@layer") are re-synced to
+  the TABLE — the fitted numbers are newer intent than the checkpoint.
+* Lanes with NO table row ADOPT the checkpointed values into the policy
+  table, so the next `_sync_ctrl` (every retune runs one) re-derives the
+  very same lanes instead of resetting them to defaults.
+* The live controller then naturally outranks both: it writes the table and
+  the lanes on every interval.
+* Dynamic state — mode_id, cooldown, occupancy — is never touched: it is
+  measurement, not intent, and only the hysteretic refresh may move it.
+
+Every resolution is journaled as a kind="restore" Decision (journal schema
+v3), so the audit trail shows exactly which side won each lane and why.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.control.report import ControlReport, Decision, DecisionJournal
+from repro.core.policy import SiteTunables, layer_key
+
+_REL_TOL = 1e-5
+
+
+def _differs(a: float, b: float) -> bool:
+    return not np.isclose(a, b, rtol=_REL_TOL, atol=0.0)
+
+
+def resolve_restored_ctrl(
+    engine,
+    cache: dict[str, Any],
+    *,
+    journal: DecisionJournal | None = None,
+    step: int = 0,
+) -> list[Decision]:
+    """Enforce ctrl-block restore precedence on a just-restored cache.
+
+    Mutates `cache` (re-synced ctrl lanes) and `engine.policy.site_tunables`
+    (adopted checkpoint lanes); returns the journaled decisions. Call once,
+    after `restore_checkpoint` and before the first serve step."""
+    decisions: list[Decision] = []
+    table = engine.policy.site_tunables
+    for name in engine.sites:
+        entry = cache.get(name)
+        if entry is None or "ctrl" not in entry:
+            continue
+        ctrl = entry["ctrl"]
+        ck_thr = np.atleast_1d(np.asarray(ctrl["sim_threshold"], np.float64))
+        ck_mw = np.atleast_1d(np.asarray(ctrl["min_work"], np.float64))
+        stacked = engine.stacking.get(name, 0) > 0
+        n_lanes = ck_thr.shape[0]
+        for lane in range(n_lanes):
+            layer = lane if stacked else None
+            row_key = layer_key(name, layer) if layer is not None else name
+            covered = row_key in table or name in table
+            resolved = engine.policy.resolve(name, layer=layer)
+            pairs = (
+                ("sim_threshold", float(ck_thr[lane]),
+                 float(resolved.sim_threshold)),
+                ("min_work_flops", float(ck_mw[lane]),
+                 float(resolved.min_work_flops)),
+            )
+            if covered:
+                # table wins: lanes re-sync below; journal real overrides
+                for field, ck, tab in pairs:
+                    if _differs(ck, tab):
+                        decisions.append(Decision(
+                            step=step, site=name, kind="restore", field=field,
+                            before=ck, after=tab, layer=layer,
+                            reason="tuned table overrides checkpointed ctrl "
+                                   "lane (precedence: checkpoint < table "
+                                   "< live)",
+                        ))
+            elif any(_differs(ck, tab) for _, ck, tab in pairs):
+                # no table row: adopt the checkpointed operating point as a
+                # policy row so later _sync_ctrl passes re-derive it instead
+                # of resetting the lane to defaults
+                adopt_key = layer_key(name, layer) if stacked else name
+                table[adopt_key] = dataclasses.replace(
+                    resolved,
+                    sim_threshold=float(ck_thr[lane]),
+                    min_work_flops=float(ck_mw[lane]),
+                )
+                for field, ck, tab in pairs:
+                    if _differs(ck, tab):
+                        decisions.append(Decision(
+                            step=step, site=name, kind="restore", field=field,
+                            before=tab, after=ck, layer=layer,
+                            reason="no tuned row for this lane: adopted "
+                                   "checkpointed ctrl value into the policy "
+                                   "table (survives later ctrl syncs)",
+                        ))
+        # one sync per site makes the lanes consistent with the final table;
+        # mode_id / cooldown / occupancy stay exactly as checkpointed
+        engine._sync_ctrl(name, cache)
+    if journal is not None and decisions:
+        journal.append(ControlReport(
+            step=step, interval=0, window_steps={},
+            decisions=decisions, retrace={},
+        ))
+    return decisions

@@ -18,7 +18,6 @@ Cells already present in --out are skipped (resumable).
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -34,6 +33,7 @@ from repro.launch.specs import (
     input_specs,
     state_specs_struct,
 )
+from repro.obs import trace as obs_trace
 from repro.roofline.hlo_parse import parse_collective_bytes, summarize_cost
 
 
@@ -215,7 +215,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, reuse: bool = False,
         record.update(status="skipped", reason=why)
         return record
 
-    t0 = time.time()
+    t0 = obs_trace.now()  # perf_counter: lower/compile timings are intervals
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
     try:
         if pipeline:
@@ -243,9 +243,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *, reuse: bool = False,
                 ),
             )
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = obs_trace.now() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = obs_trace.now() - t0 - t_lower
 
             try:
                 mem = compiled.memory_analysis()

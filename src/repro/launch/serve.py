@@ -6,16 +6,29 @@
 Runs the full serving stack at reduced scale: prefill into slot lanes, shared
 decode step with the reuse engine threaded, per-site similarity stats printed
 at the end (the live analogue of paper Fig. 12's per-layer similarity).
+
+Observability (`repro.obs`): `--obs` turns on span tracing + metrics for the
+run; `--obs-dir OUT` additionally exports `metrics.prom` (Prometheus
+textfile), `metrics.jsonl` (snapshots for `python -m repro.obs.top`),
+`spans.jsonl`, and `latency_table.json` — the measured per-(site, layer,
+exec_path) dispatch latencies, probed at the run's measured skip rates. Feed
+that table back with `--latency-table` (or to `repro.tune.fit
+--latency-table`) and break-even/exec decisions are priced from measured
+wall-clock instead of cost-model constants. `--profile-dir` opens a
+`jax.profiler` device-trace window around the serve loop; the obs spans'
+TraceAnnotations line up host spans with device slices.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import events, trace as obs_trace
 
 from repro.configs import get_config
 from repro.core.reuse_cache import cache_bytes
@@ -66,18 +79,61 @@ def main() -> None:
     ap.add_argument("--control-journal", default=None,
                     help="append the controller's decision journal (JSONL) "
                     "to this path for audit/replay")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the observability plane: perf_counter spans "
+                    "around serve steps/prefills, correlation ids stamped on "
+                    "sensor/journal rows, metrics aggregation")
+    ap.add_argument("--obs-dir", default=None,
+                    help="export observability artifacts here (implies "
+                    "--obs): metrics.prom, metrics.jsonl, spans.jsonl, and "
+                    "latency_table.json (measured per-site/path dispatch "
+                    "latencies, probed at the run's measured skip rates)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="open a jax.profiler trace window around the serve "
+                    "loop, writing the device trace here")
+    ap.add_argument("--latency-table", default=None,
+                    help="measured latency table (a previous run's "
+                    "--obs-dir/latency_table.json) for the online controller "
+                    "— break-even/exec retunes are priced from measured "
+                    "wall-clock; requires --control-every")
+    ap.add_argument("--cache-ckpt", default=None,
+                    help="reuse-cache checkpoint directory: restore the "
+                    "latest step at start (ctrl-block precedence: checkpoint "
+                    "< tuned table < live controller, resolutions journaled) "
+                    "and save the final cache at exit; requires --reuse")
     args = ap.parse_args()
 
     for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity",
-                 "control_every", "control_journal"):
+                 "control_every", "control_journal", "cache_ckpt"):
         if getattr(args, flag) and not args.reuse:
             ap.error(f"--{flag.replace('_', '-')} requires --reuse")
     if args.control_journal and not args.control_every:
         ap.error("--control-journal requires --control-every")
+    if args.latency_table and not args.control_every:
+        ap.error("--latency-table requires --control-every")
     if args.control_every and args.refresh_every:
         print("--control-every supersedes --refresh-every "
               "(the controller runs the mode refresh itself)")
         args.refresh_every = 0
+
+    obs_on = args.obs or bool(args.obs_dir)
+    registry = None
+    if obs_on:
+        from repro.obs.metrics import MetricsRegistry
+
+        obs_trace.enable()
+        run_id = events.new_run_id()
+        events.set_ids(run=run_id)
+        registry = MetricsRegistry()
+        print(f"obs: tracing enabled, run={run_id}")
+
+    # One shared journal: the restore-precedence pass (below) and the online
+    # controller append to the same audit stream.
+    journal = None
+    if args.control_journal:
+        from repro.control.report import DecisionJournal
+
+        journal = DecisionJournal(args.control_journal)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -102,6 +158,24 @@ def main() -> None:
         rcache = engine.init_cache(args.batch_slots)
         print(f"reuse cache: {cache_bytes(rcache)/1e6:.2f} MB "
               f"({len(engine.sites)} sites)")
+        if args.cache_ckpt:
+            from repro.ckpt.checkpoint import latest_step, restore_checkpoint
+            from repro.control.restore import resolve_restored_ctrl
+
+            ck_step = latest_step(args.cache_ckpt)
+            if ck_step is not None:
+                rcache = restore_checkpoint(args.cache_ckpt, ck_step, rcache)
+                resolutions = resolve_restored_ctrl(
+                    engine, rcache, journal=journal, step=0)
+                print(f"cache checkpoint: restored step {ck_step} from "
+                      f"{args.cache_ckpt}; ctrl precedence resolved "
+                      f"{len(resolutions)} lanes "
+                      f"(checkpoint < tuned table < live)")
+                for d in resolutions:
+                    where = d.site + (f"@{d.layer}" if d.layer is not None
+                                      else "")
+                    print(f"  restore {where} {d.field}: "
+                          f"{d.before} -> {d.after}")
         if args.tuned_policy:
             # tuned-vs-default delta: probe each site at full similarity
             # (isolates the min-work admission decision) and report the
@@ -152,10 +226,19 @@ def main() -> None:
     if args.control_every > 0:
         from repro.control import AdmissionPredictor, ControlConfig, Controller
 
+        latency = None
+        if args.latency_table:
+            from repro.obs.latency import load_latency_table
+
+            latency = load_latency_table(args.latency_table)
+            print(f"controller pricing from measured latencies: "
+                  f"{args.latency_table} ({len(latency)} rows)")
         predictor = AdmissionPredictor()
         controller = Controller(
-            ControlConfig(journal_path=args.control_journal),
+            ControlConfig(),
             admission=predictor,
+            journal=journal,
+            latency=latency,
         )
 
     def prefill_fn(prompt, slot):
@@ -251,7 +334,15 @@ def main() -> None:
         def on_step(step_idx):
             nonlocal decode_jit
             if step_idx % args.control_every == 0:
-                rep = controller.step(engine, sstate["rcache"], step=step_idx)
+                # the window id joins this interval's journal rows with the
+                # spans and sensor rows emitted while it was open
+                with events.context(window=step_idx):
+                    rep = controller.step(
+                        engine, sstate["rcache"], step=step_idx)
+                if registry is not None:
+                    from repro.obs.metrics import observe_control_report
+
+                    observe_control_report(registry, rep)
                 if rep.decisions:
                     print("\n".join(rep.summary_lines()))
                 if rep.changed:
@@ -286,11 +377,18 @@ def main() -> None:
             session=f"sess-{i % 2}" if controller is not None else None,
         ))
 
-    t0 = time.time()
+    if args.profile_dir:
+        obs_trace.start_profile(args.profile_dir)
+    t0 = obs_trace.now()  # perf_counter: monotonic wall-clock discipline
     done = batcher.run()
-    dt = time.time() - t0
+    dt = obs_trace.now() - t0
+    if args.profile_dir:
+        prof = obs_trace.stop_profile()
+        if prof:
+            print(f"device trace written to {prof}")
     print(f"served {len(done)}/{args.requests} requests in {dt:.2f}s; "
           f"{batcher.stats}")
+    report = None
     if engine is not None:
         report = engine.sensor_report(sstate["rcache"])
         print("\n".join(report.summary_lines()))
@@ -304,6 +402,40 @@ def main() -> None:
         if controller.journal is not None:
             print(f"decision journal: {controller.journal.rows_written} rows "
                   f"-> {controller.journal.path}")
+    if args.cache_ckpt and engine is not None:
+        from repro.ckpt.checkpoint import save_checkpoint
+
+        save_checkpoint(args.cache_ckpt, batcher.stats["steps"],
+                        sstate["rcache"])
+        print(f"cache checkpoint: saved step {batcher.stats['steps']} "
+              f"to {args.cache_ckpt}")
+    if args.obs_dir:
+        from repro.obs.export import write_jsonl, write_prometheus
+        from repro.obs.metrics import observe_sensor_report, observe_spans
+
+        os.makedirs(args.obs_dir, exist_ok=True)
+        if engine is not None:
+            # Probe measured dispatch latency per (site, exec_path), at the
+            # run's MEASURED skip rates — the table --latency-table and
+            # `repro.tune.fit --latency-table` consume.
+            from repro.obs.latency import probe_latency_table
+
+            skips = {s.site: s.tile_skip_rate for s in report.per_site}
+            table = probe_latency_table(
+                engine, args.batch_slots, skip_rates=skips)
+            lat_path = os.path.join(args.obs_dir, "latency_table.json")
+            table.save(lat_path, meta={"arch": args.arch})
+            print("\n".join(table.summary_lines()))
+            print(f"measured latency table -> {lat_path}")
+            observe_sensor_report(registry, report)
+        observe_spans(registry, obs_trace.spans())
+        n = write_prometheus(
+            os.path.join(args.obs_dir, "metrics.prom"), registry)
+        write_jsonl(os.path.join(args.obs_dir, "metrics.jsonl"), registry)
+        n_spans = obs_trace.write_spans_jsonl(
+            os.path.join(args.obs_dir, "spans.jsonl"))
+        print(f"obs exports -> {args.obs_dir} (metrics.prom {n} lines, "
+              f"metrics.jsonl, spans.jsonl {n_spans} spans)")
     assert len(done) == args.requests
 
 

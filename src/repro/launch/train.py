@@ -10,7 +10,6 @@ Wires together: config -> init/resume -> data pipeline -> pjit'd train_step
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +17,7 @@ import numpy as np
 
 from repro.ckpt.recovery import LoopConfig, ResilientLoop
 from repro.configs import get_config
+from repro.obs import trace as obs_trace
 from repro.data.pipeline import make_source
 from repro.launch.specs import ShapeCell
 from repro.optim.adamw import AdamWConfig
@@ -87,9 +87,9 @@ def main() -> None:
                 flush=True,
             )
 
-    t0 = time.time()
+    t0 = obs_trace.now()  # perf_counter: monotonic wall-clock discipline
     state = loop.run(state, start, args.steps, on_metrics=on_metrics)
-    dt = time.time() - t0
+    dt = obs_trace.now() - t0
     print(
         f"done: {args.steps} steps in {dt:.1f}s "
         f"({args.steps / max(dt, 1e-9):.2f} it/s); "

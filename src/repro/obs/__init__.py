@@ -1,0 +1,92 @@
+"""repro.obs — unified tracing, metrics, and measured-latency plane.
+
+Before this package, a serve run's latency story lived in five scattered
+``time.time()`` call sites and three disconnected JSONL formats (sensor rows,
+control journal, BENCH trajectory) with no way to join them, and every
+break-even knob in the control loop was priced by cost-model CONSTANTS. The
+obs plane unifies them:
+
+* :mod:`repro.obs.trace`   — low-overhead host-side spans (`perf_counter`
+  discipline, optional `block_until_ready` at close, nestable, strict no-op
+  when disabled) that also emit `jax.profiler` device-trace markers;
+* :mod:`repro.obs.events`  — correlation ids (run / session / request /
+  window / site@layer) stamped onto spans, sensor rows, and control-journal
+  decisions, so one serve run becomes ONE joinable event stream;
+* :mod:`repro.obs.metrics` — counters / gauges / histograms (p50/p95/p99)
+  aggregated from sensor counters, controller state and spans;
+* :mod:`repro.obs.export`  — Prometheus textfile + JSONL snapshot emission
+  (and the parser for round-trip tests);
+* :mod:`repro.obs.latency` — the payoff: a per-(site, layer, exec_path)
+  MEASURED latency table built from spans, saved/loaded like the tuned-policy
+  table and consumed by `repro.tune.fit --latency-table` and the online
+  retuner in place of constant cost-model latencies;
+* ``python -m repro.obs.top`` — live terminal view of a serve run's metrics
+  snapshots.
+
+Everything here is host-side and dependency-free beyond jax/numpy; with
+tracing disabled (the default) every instrumentation point is a shared no-op.
+"""
+
+from repro.obs.events import (
+    clear_ids,
+    context,
+    current_ids,
+    new_run_id,
+    set_ids,
+    stamp,
+)
+from repro.obs.latency import (
+    LatencyStat,
+    LatencyTable,
+    build_from_spans,
+    load_latency_table,
+    probe_latency_table,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    observe_control_report,
+    observe_sensor_report,
+)
+from repro.obs.trace import (
+    disable,
+    drain_spans,
+    enable,
+    is_enabled,
+    now,
+    span,
+    spans,
+    start_profile,
+    stop_profile,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LatencyStat",
+    "LatencyTable",
+    "MetricsRegistry",
+    "build_from_spans",
+    "clear_ids",
+    "context",
+    "current_ids",
+    "disable",
+    "drain_spans",
+    "enable",
+    "is_enabled",
+    "load_latency_table",
+    "new_run_id",
+    "now",
+    "observe_control_report",
+    "observe_sensor_report",
+    "probe_latency_table",
+    "set_ids",
+    "spans",
+    "span",
+    "stamp",
+    "start_profile",
+    "stop_profile",
+]

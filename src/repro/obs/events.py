@@ -1,0 +1,83 @@
+"""Correlation ids — the join keys of the unified event stream.
+
+A serve run emits three record families: sensor rows (cumulative counters),
+control-journal rows (policy decisions), and obs spans (measured wall-clock).
+Before this module they were three files with nothing in common; now every
+record is stamped with the SAME id set, so a run can be joined offline:
+
+    run      — one id per process-lifetime observation scope (a serve run)
+    session  — the session the active request belongs to (admission identity)
+    request  — the request id being prefillled/retired
+    window   — the controller interval the record falls in
+    site / layer — which reuse site (and ctrl lane) a record concerns
+
+Ids live in module state (the serving loop is single-threaded host Python;
+the jitted step never reads them). `stamp(row)` returns the row with a
+``"trace"`` sub-dict of the current ids — and returns it UNCHANGED when no
+ids are set, so consumers that never touch the obs plane emit byte-identical
+rows to the pre-obs builds.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import uuid
+from typing import Any
+
+_IDS: dict[str, Any] = {}
+
+
+def new_run_id() -> str:
+    """A fresh run-scope id (short uuid — unique per serve/bench process)."""
+    return uuid.uuid4().hex[:12]
+
+
+def set_ids(**ids: Any) -> None:
+    """Set correlation ids for subsequent stamps. `None` values clear keys."""
+    for key, val in ids.items():
+        if val is None:
+            _IDS.pop(key, None)
+        else:
+            _IDS[key] = val
+
+
+def clear_ids(*keys: str) -> None:
+    """Clear the named ids, or ALL ids when called with no arguments."""
+    if not keys:
+        _IDS.clear()
+        return
+    for key in keys:
+        _IDS.pop(key, None)
+
+
+def current_ids() -> dict[str, Any]:
+    return dict(_IDS)
+
+
+@contextlib.contextmanager
+def context(**ids: Any):
+    """Scoped ids: set for the block, restore the previous values after —
+    nesting-safe (an inner request context restores the outer window id)."""
+    saved = {key: _IDS.get(key, _MISSING) for key in ids}
+    set_ids(**ids)
+    try:
+        yield
+    finally:
+        for key, val in saved.items():
+            if val is _MISSING:
+                _IDS.pop(key, None)
+            else:
+                _IDS[key] = val
+
+
+_MISSING = object()
+
+
+def stamp(row: dict[str, Any]) -> dict[str, Any]:
+    """Return `row` with the current correlation ids under ``"trace"``.
+
+    With no ids set (obs plane never initialised) the row is returned
+    UNCHANGED — pre-obs consumers see byte-identical emission."""
+    if not _IDS:
+        return row
+    return dict(row, trace=dict(_IDS))

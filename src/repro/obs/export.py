@@ -1,0 +1,136 @@
+"""Metrics export — Prometheus textfile + JSONL snapshots.
+
+Two sinks, one registry:
+
+* `write_prometheus(path, registry)` — the node-exporter textfile-collector
+  format: `# TYPE` headers, `name{label="v"} value` samples; histograms emit
+  `_count`/`_sum` plus `{quantile="0.5|0.95|0.99"}` summary samples.
+* `write_jsonl(path, registry)` — appends one snapshot row per metric,
+  stamped with the current correlation ids and a shared `snap` sequence
+  number so `repro.obs.top` (and offline joins) can group rows per snapshot.
+
+`parse_prometheus` is the inverse of the textfile writer — the round-trip
+contract the exporter tests lock.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Any
+
+from repro.obs.events import stamp
+from repro.obs.metrics import MetricsRegistry
+
+_SNAP_SEQ = {"n": 0}
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(name: str) -> str:
+    return _NAME_RE.sub("_", name)
+
+
+def _prom_labels(labels: dict[str, Any], extra: dict[str, Any] | None = None
+                 ) -> str:
+    merged = dict(labels)
+    if extra:
+        merged.update(extra)
+    if not merged:
+        return ""
+    inner = ",".join(
+        f'{_prom_name(str(k))}="{str(v)}"' for k, v in sorted(merged.items())
+    )
+    return "{" + inner + "}"
+
+
+def prometheus_lines(registry: MetricsRegistry) -> list[str]:
+    lines: list[str] = []
+    seen_types: set[str] = set()
+    for row in registry.snapshot():
+        name = _prom_name(row["name"])
+        kind = row["type"]
+        if kind == "histogram":
+            # summary-style emission: quantiles + _count/_sum
+            if name not in seen_types:
+                lines.append(f"# TYPE {name} summary")
+                seen_types.add(name)
+            for q in (50, 95, 99):
+                lines.append(
+                    f"{name}{_prom_labels(row['labels'], {'quantile': q / 100})}"
+                    f" {row[f'p{q}']:.9g}")
+            lines.append(
+                f"{name}_count{_prom_labels(row['labels'])} {row['count']}")
+            lines.append(
+                f"{name}_sum{_prom_labels(row['labels'])} {row['sum']:.9g}")
+        else:
+            prom_kind = "counter" if kind == "counter" else "gauge"
+            if name not in seen_types:
+                lines.append(f"# TYPE {name} {prom_kind}")
+                seen_types.add(name)
+            lines.append(
+                f"{name}{_prom_labels(row['labels'])} {row['value']:.9g}")
+    return lines
+
+
+def write_prometheus(path: str, registry: MetricsRegistry) -> int:
+    lines = prometheus_lines(registry)
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + ("\n" if lines else ""))
+    return len(lines)
+
+
+def parse_prometheus(text: str) -> dict[str, dict[str, float]]:
+    """Inverse of the textfile writer: {metric_name: {label_string: value}}.
+    `# TYPE` lines are validated (they must precede their samples)."""
+    out: dict[str, dict[str, float]] = {}
+    typed: set[str] = set()
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 4 and parts[1] == "TYPE":
+                typed.add(parts[2])
+            continue
+        m = re.match(r"^([a-zA-Z0-9_:]+)(\{[^}]*\})?\s+(\S+)$", line)
+        if m is None:
+            raise ValueError(f"line {lineno}: not a prometheus sample: {line!r}")
+        name, labels, value = m.group(1), m.group(2) or "", m.group(3)
+        base = name[:-6] if name.endswith("_count") else (
+            name[:-4] if name.endswith("_sum") else name)
+        if base not in typed:
+            raise ValueError(f"line {lineno}: sample {name!r} precedes its "
+                             f"# TYPE header")
+        out.setdefault(name, {})[labels] = float(value)
+    return out
+
+
+def write_jsonl(path: str, registry: MetricsRegistry, *,
+                extra: dict[str, Any] | None = None) -> int:
+    """Append one snapshot (one row per metric) to a JSONL file. Rows share a
+    `snap` sequence number and carry the current correlation ids."""
+    _SNAP_SEQ["n"] += 1
+    snap = _SNAP_SEQ["n"]
+    rows = registry.snapshot()
+    with open(path, "a") as f:
+        for row in rows:
+            row = dict(row, snap=snap)
+            if extra:
+                row.update(extra)
+            f.write(json.dumps(stamp(row)) + "\n")
+    return len(rows)
+
+
+def load_snapshots(path: str) -> list[list[dict[str, Any]]]:
+    """Parse a metrics JSONL back into snapshots (grouped by `snap`)."""
+    by_snap: dict[int, list[dict[str, Any]]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            by_snap.setdefault(int(row.get("snap", 0)), []).append(row)
+    return [by_snap[k] for k in sorted(by_snap)]

@@ -1,0 +1,296 @@
+"""Measured per-(site, layer, exec_path) latency table — the obs payoff.
+
+The ROADMAP's top open item: every break-even knob in the control loop is
+calibrated against a cost MODEL (energy constants, `RAGGED_BREAK_EVEN_SKIP`),
+not observed wall-clock. This module produces the measured replacement:
+
+* :class:`LatencyTable` — per-(site, layer, exec_path) latency statistics
+  (count / mean / p50 / p95 seconds), saved/loaded as versioned JSON exactly
+  like the tuned-policy table;
+* :func:`build_from_spans` — builds a table from obs spans that carry
+  ``site`` / ``exec_path`` tags (the probe emits them; any span source works);
+* :func:`probe_latency_table` — measures each registered site's dispatch
+  wall-clock per viable execution path (basic-mode dense GEMM as the
+  baseline, plus every reuse substrate the impl supports), on a synthetic
+  delta stream matched to the site's MEASURED skip rate, with
+  `block_until_ready` inside `perf_counter` spans.
+
+`repro.tune.fit --latency-table` and the online retuner
+(`repro.control.Controller`) hand the loaded table to the harvest model
+(`FitConfig.latency`), which then prices break-even hit rates and exec-path
+pins from these measured numbers instead of the energy-model constants.
+
+Stacked sites are probed once at layer=None (every layer shares the dispatch
+geometry; per-layer MODE differences are captured by probing both the basic
+and reuse paths), and `LatencyTable.stat` falls back layer→None on lookup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable
+
+import numpy as np
+
+LATENCY_TABLE_SCHEMA_VERSION = 1
+LATENCY_TABLE_KIND = "obs_latency_table"
+
+# The baseline "execution path" of the basic-mode (ReuseOFF) evaluation —
+# not a member of core EXEC_PATHS on purpose: it names the whole dense
+# quantized GEMM the reuse paths are priced against.
+BASIC_PATH = "basic"
+
+
+class LatencyTableError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStat:
+    count: int
+    mean_s: float
+    p50_s: float
+    p95_s: float
+
+    @staticmethod
+    def from_samples(samples: Iterable[float]) -> "LatencyStat":
+        a = np.asarray(list(samples), np.float64)
+        return LatencyStat(
+            count=int(a.size),
+            mean_s=float(a.mean()) if a.size else 0.0,
+            p50_s=float(np.quantile(a, 0.5)) if a.size else 0.0,
+            p95_s=float(np.quantile(a, 0.95)) if a.size else 0.0,
+        )
+
+
+_Key = tuple[str, Any, str]  # (site, layer|None, exec_path)
+
+
+class LatencyTable:
+    """Measured dispatch latency per (site, layer, exec_path)."""
+
+    def __init__(self):
+        self._samples: dict[_Key, list[float]] = {}
+        self.meta: dict[str, Any] = {}
+
+    def record(self, site: str, layer: int | None, exec_path: str,
+               seconds: float) -> None:
+        self._samples.setdefault((site, layer, exec_path), []).append(
+            float(seconds))
+
+    def stat(self, site: str, exec_path: str, *,
+             layer: int | None = None) -> LatencyStat | None:
+        """Measured stats for one (site, layer, exec_path); a layer-specific
+        lookup falls back to the site-wide (layer=None) row."""
+        samples = self._samples.get((site, layer, exec_path))
+        if samples is None and layer is not None:
+            samples = self._samples.get((site, None, exec_path))
+        if not samples:
+            return None
+        return LatencyStat.from_samples(samples)
+
+    def paths_for(self, site: str, *,
+                  layer: int | None = None) -> dict[str, LatencyStat]:
+        """{exec_path: stat} of every measured path for one site (layer rows
+        preferred, site-wide rows filling the gaps)."""
+        out: dict[str, LatencyStat] = {}
+        for (s, lyr, path), samples in self._samples.items():
+            if s != site or not samples:
+                continue
+            if lyr is None and path not in out:
+                out[path] = LatencyStat.from_samples(samples)
+            elif layer is not None and lyr == layer:
+                out[path] = LatencyStat.from_samples(samples)
+        return out
+
+    def rows(self) -> list[dict[str, Any]]:
+        out = []
+        for (site, layer, path), samples in sorted(
+            self._samples.items(),
+            key=lambda kv: (kv[0][0], -1 if kv[0][1] is None else kv[0][1],
+                            kv[0][2]),
+        ):
+            stat = LatencyStat.from_samples(samples)
+            out.append({
+                "site": site, "layer": layer, "exec_path": path,
+                **dataclasses.asdict(stat),
+            })
+        return out
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def summary_lines(self) -> list[str]:
+        lines = [f"LatencyTable: {len(self)} (site, layer, exec_path) rows"]
+        for r in self.rows():
+            where = r["site"] + (f"@{r['layer']}" if r["layer"] is not None
+                                 else "")
+            lines.append(
+                f"  {where:24s} {r['exec_path']:8s} n={r['count']:3d} "
+                f"mean={r['mean_s'] * 1e6:9.1f}us p50={r['p50_s'] * 1e6:9.1f}us "
+                f"p95={r['p95_s'] * 1e6:9.1f}us"
+            )
+        return lines
+
+    # ------------------------------------------------------------ save/load
+
+    def save(self, path: str, *, meta: dict[str, Any] | None = None) -> None:
+        doc = {
+            "schema_version": LATENCY_TABLE_SCHEMA_VERSION,
+            "kind": LATENCY_TABLE_KIND,
+            "meta": {**self.meta, **(meta or {})},
+            "rows": self.rows(),
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def load_latency_table(path: str) -> LatencyTable:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("kind") != LATENCY_TABLE_KIND:
+        raise LatencyTableError(f"{path}: not a {LATENCY_TABLE_KIND} document")
+    ver = doc.get("schema_version")
+    if ver != LATENCY_TABLE_SCHEMA_VERSION:
+        raise LatencyTableError(
+            f"{path}: schema_version {ver} != supported "
+            f"{LATENCY_TABLE_SCHEMA_VERSION}")
+    table = LatencyTable()
+    table.meta = dict(doc.get("meta", {}))
+    for r in doc.get("rows", []):
+        # mean-weighted reconstruction: one synthetic sample per recorded
+        # stat keeps save→load→stat round trips exact for mean, and p50/p95
+        # collapse onto it (percentile detail lives in the saving process)
+        key = (r["site"], r.get("layer"), r["exec_path"])
+        table._samples[key] = [float(r["mean_s"])] * max(int(r["count"]), 1)
+    return table
+
+
+def build_from_spans(span_rows: Iterable[dict[str, Any]]) -> LatencyTable:
+    """A LatencyTable from obs spans tagged with site/exec_path (layer
+    optional) — the probe's spans, or any instrumented source."""
+    table = LatencyTable()
+    for row in span_rows:
+        site = row.get("site")
+        path = row.get("exec_path")
+        if site is None or path is None:
+            continue
+        table.record(site, row.get("layer"), path, row["dur_s"])
+    return table
+
+
+# -------------------------------------------------------------- the prober
+
+def _viable_paths(spec, impl: str) -> list[str]:
+    """Execution paths measurable for one site on one substrate: the masked
+    walk plus — when the K extent compacts (gk >= 2) — the compacted tier."""
+    gk = -(-spec.in_features // spec.block_k)
+    if impl == "jnp":
+        paths = ["dense"]
+        if gk >= 2:
+            paths.append("compact")
+    else:
+        paths = ["kernel"]
+        if gk >= 2:
+            paths.append("ragged")
+    return paths
+
+
+def probe_latency_table(
+    engine,
+    batch: int,
+    *,
+    skip_rates: dict[str, float] | None = None,
+    iters: int = 5,
+    warmup: int = 2,
+    seed: int = 0,
+) -> LatencyTable:
+    """Measure every registered site's dispatch wall-clock per viable path.
+
+    For each site: a synthetic activation pair whose delta skips ~the site's
+    measured tile-skip rate (`skip_rates`, e.g. from a live SensorReport;
+    default 0.5), probed through a jitted `reuse_linear` per path —
+    basic-mode dense GEMM as the baseline (recorded as exec_path "basic"),
+    then each reuse substrate. Timing is `perf_counter` around
+    `block_until_ready`, emitted as obs spans (`site_probe`), and the table
+    is built from those spans — so a probe run joins the event stream like
+    any other measurement.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.reuse_cache import init_site_cache
+    from repro.core.reuse_linear import reuse_linear
+    from repro.obs import trace
+
+    was_enabled = trace.is_enabled()
+    if not was_enabled:
+        trace.enable()
+    probe_spans: list[dict[str, Any]] = []
+    rng = np.random.default_rng(seed)
+    for name, spec in engine.sites.items():
+        skip = float((skip_rates or {}).get(name, 0.5))
+        skip = min(max(skip, 0.0), 1.0)
+        gk = -(-spec.in_features // spec.block_k)
+        # Two activation sets whose mutual delta leaves ~skip of the K-blocks
+        # untouched: alternating them gives every timed call the same
+        # measured-regime tile occupancy.
+        x_a = rng.standard_normal((batch, spec.in_features)).astype(np.float32)
+        x_b = x_a.copy()
+        live_blocks = [j for j in range(gk) if rng.random() >= skip] or [0]
+        for j in live_blocks:
+            lo = j * spec.block_k
+            hi = min(lo + spec.block_k, spec.in_features)
+            x_b[:, lo:hi] += rng.standard_normal(
+                (batch, hi - lo)).astype(np.float32)
+        w = rng.standard_normal(
+            (spec.in_features, spec.out_features)).astype(np.float32) * 0.05
+        xs = [jnp.asarray(x_a), jnp.asarray(x_b)]
+        w = jnp.asarray(w)
+
+        budget = spec.max_active_k
+        if budget is None:
+            occupancy = max(len(live_blocks) / gk, 1.0 / gk)
+            budget = max(1, min(gk, int(np.ceil(gk * occupancy * 1.25))))
+
+        for path in [BASIC_PATH] + _viable_paths(spec, engine.impl):
+            if path == BASIC_PATH:
+                pspec, mode = spec, "basic"
+            else:
+                pspec = dataclasses.replace(
+                    spec, exec_path=path,
+                    max_active_k=(budget if path in ("ragged", "compact")
+                                  else None),
+                )
+                mode = "reuse"
+            cache = init_site_cache(pspec, batch, engine.policy.resolve(name))
+
+            @jax.jit
+            def step(x, c, _spec=pspec, _mode=mode):
+                out, new_c, _ = reuse_linear(
+                    x, w, None, c, _spec, mode=_mode, impl=engine.impl)
+                return out, new_c
+
+            for i in range(max(warmup, 1)):
+                out, cache = step(xs[i % 2], cache)
+            jax.block_until_ready(out)
+            n0 = len(trace.spans())
+            for i in range(iters):
+                with trace.span("site_probe", site=name, layer=None,
+                                exec_path=path, skip_rate=skip) as sp:
+                    out, cache = step(xs[i % 2], cache)
+                    sp.sync(out)
+            probe_spans.extend(trace.spans()[n0:])
+
+    table = build_from_spans(probe_spans)
+    table.meta = {
+        "source": "probe_latency_table",
+        "impl": engine.impl,
+        "batch": batch,
+        "iters": iters,
+    }
+    if not was_enabled:
+        trace.disable()
+    return table

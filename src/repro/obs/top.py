@@ -1,0 +1,100 @@
+"""``python -m repro.obs.top`` — live terminal view of a serve run's metrics.
+
+Tails the JSONL snapshot stream written by `repro.obs.export.write_jsonl`
+(e.g. `serve --obs-dir OUT` → `OUT/metrics.jsonl`) and renders the latest
+snapshot as a compact table: gauges and counters first, then histogram rows
+with count / mean / p50 / p95 / p99. ``--once`` renders a single frame and
+exits (the CI smoke uses it to assert the stream is renderable).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import Any
+
+from repro.obs.export import load_snapshots
+
+
+def _fmt_val(v: float) -> str:
+    if v == 0:
+        return "0"
+    if abs(v) >= 1e4 or abs(v) < 1e-3:
+        return f"{v:.3g}"
+    return f"{v:.4f}".rstrip("0").rstrip(".")
+
+
+def _fmt_labels(labels: dict[str, Any]) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+
+
+def render_snapshot(rows: list[dict[str, Any]]) -> list[str]:
+    """One terminal frame from one snapshot's rows."""
+    trace = next((r.get("trace") for r in rows if r.get("trace")), None)
+    header = f"repro.obs.top — snap {rows[0].get('snap', '?')}" if rows else \
+        "repro.obs.top — empty stream"
+    if trace:
+        header += "  run=" + str(trace.get("run", "?"))
+        if "window" in trace:
+            header += f"  window={trace['window']}"
+    lines = [header, "-" * len(header)]
+    scalars = [r for r in rows if r["type"] in ("counter", "gauge")]
+    hists = [r for r in rows if r["type"] == "histogram"]
+    for r in sorted(scalars, key=lambda r: (r["name"], str(r["labels"]))):
+        name = r["name"] + _fmt_labels(r["labels"])
+        lines.append(f"  {name:48s} {_fmt_val(r['value']):>12s}")
+    if hists:
+        lines.append("")
+        lines.append(f"  {'histogram':48s} {'count':>8s} {'mean':>10s} "
+                     f"{'p50':>10s} {'p95':>10s} {'p99':>10s}")
+        for r in sorted(hists, key=lambda r: (r["name"], str(r["labels"]))):
+            name = r["name"] + _fmt_labels(r["labels"])
+            lines.append(
+                f"  {name:48s} {int(r['count']):>8d} "
+                f"{_fmt_val(r['mean']):>10s} {_fmt_val(r['p50']):>10s} "
+                f"{_fmt_val(r['p95']):>10s} {_fmt_val(r['p99']):>10s}")
+    return lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.top", description=__doc__)
+    ap.add_argument("metrics_jsonl", help="metrics snapshot stream "
+                    "(e.g. OBS_DIR/metrics.jsonl)")
+    ap.add_argument("--once", action="store_true",
+                    help="render the latest snapshot once and exit")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="refresh period in seconds (follow mode)")
+    args = ap.parse_args(argv)
+
+    last_snap = None
+    while True:
+        if not os.path.exists(args.metrics_jsonl):
+            print(f"waiting for {args.metrics_jsonl} ...")
+        else:
+            snaps = load_snapshots(args.metrics_jsonl)
+            if snaps:
+                rows = snaps[-1]
+                snap_id = rows[0].get("snap")
+                if args.once or snap_id != last_snap:
+                    frame = render_snapshot(rows)
+                    if not args.once:
+                        sys.stdout.write("\x1b[2J\x1b[H")
+                    print("\n".join(frame))
+                    last_snap = snap_id
+            elif args.once:
+                print("repro.obs.top — empty stream")
+        if args.once:
+            return 0
+        try:
+            time.sleep(args.interval)
+        except KeyboardInterrupt:
+            return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -171,11 +171,16 @@ class SensorReport:
         return lines
 
     def to_dicts(self) -> list[dict[str, Any]]:
+        # Rows carry the obs correlation ids under "trace" when the obs plane
+        # set any (stamp is the identity otherwise — schema stays v5; the
+        # sub-dict is additive and only present on obs-enabled runs).
+        from repro.obs.events import stamp
+
         ver = {"schema_version": SENSOR_SCHEMA_VERSION}
         rows = [dict(self.model, kind="model", **ver)]
         rows += [dict(s.to_dict(), kind="site", **ver) for s in self.per_site]
         rows += [dict(s.to_dict(), kind="layer", **ver) for s in self.per_layer]
-        return rows
+        return [stamp(row) for row in rows]
 
     def write_jsonl(self, path: str, *, mode: str = "a") -> None:
         with open(path, mode) as f:

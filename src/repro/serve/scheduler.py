@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import events
+from repro.obs.trace import span
+
 
 @dataclasses.dataclass
 class Request:
@@ -155,7 +158,14 @@ class ContinuousBatcher:
             req.slot = slot
             if self.on_place is not None:
                 self.on_place(req)
-            first = self.prefill_fn(req.prompt[None, :], slot)
+            # The prefill span (and everything the prefill emits) carries the
+            # request/session identity — admission is where a slot's stream
+            # changes owner, so this is the correlation boundary.
+            with events.context(request=req.rid, session=req.session,
+                                slot=slot):
+                with span("prefill", slot=slot,
+                          prompt_len=int(req.prompt.shape[0])) as sp:
+                    first = sp.sync(self.prefill_fn(req.prompt[None, :], slot))
             req.output.append(int(first))
             self.active[slot] = req
             self.stats["prefills"] += 1
@@ -164,13 +174,15 @@ class ContinuousBatcher:
         req = self.active.pop(slot)
         req.done = True
         # Snapshot per-request reuse telemetry BEFORE the slot is freed (the
-        # next occupant's prefill resets the slot's sensor lanes).
-        if self.telemetry_fn is not None:
-            req.telemetry = self.telemetry_fn(slot)
-        self.completed.append(req)
-        self.free_slots.append(slot)
-        if self.on_retire is not None:
-            self.on_retire(req)
+        # next occupant's prefill resets the slot's sensor lanes). Retirement
+        # work is stamped with the departing request's identity.
+        with events.context(request=req.rid, session=req.session, slot=slot):
+            if self.telemetry_fn is not None:
+                req.telemetry = self.telemetry_fn(slot)
+            self.completed.append(req)
+            self.free_slots.append(slot)
+            if self.on_retire is not None:
+                self.on_retire(req)
 
     def run(self) -> list[Request]:
         cur = np.zeros((self.batch_slots, 1), np.int32)
@@ -180,7 +192,10 @@ class ContinuousBatcher:
                 break
             for slot, req in self.active.items():
                 cur[slot, 0] = req.output[-1]
-            nxt = np.asarray(self.decode_fn(cur))
+            # THE serve-step measurement: host dispatch + device execution
+            # (sync), one span per decode step, batch-occupancy tagged.
+            with span("serve_step", active=len(self.active)) as sp:
+                nxt = np.asarray(sp.sync(self.decode_fn(cur)))
             self.stats["steps"] += 1
             if self.on_step is not None:
                 self.on_step(self.stats["steps"])

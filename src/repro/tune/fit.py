@@ -130,6 +130,11 @@ def main() -> None:
                     default=FitConfig.safety_margin)
     ap.add_argument("--prior-efficiency", type=float,
                     default=FitConfig.prior_efficiency)
+    ap.add_argument("--latency-table", default=None,
+                    help="measured per-(site, layer, exec_path) latency "
+                    "table (serve --obs-dir writes one); when given, "
+                    "break-even / admission / exec pins are priced from "
+                    "measured wall-clock instead of energy-model constants")
     ap.add_argument("--pallas-target", action="store_true",
                     help="fit the Pallas compacted-grid path (exec_path="
                     "'ragged') for high-skip sites instead of the jnp "
@@ -140,14 +145,24 @@ def main() -> None:
                     "tunables rows (per-layer ctrl-lane thresholds)")
     args = ap.parse_args()
 
+    latency = None
+    if args.latency_table:
+        from repro.obs.latency import load_latency_table
+
+        latency = load_latency_table(args.latency_table)
+        print(f"pricing from measured latencies: {args.latency_table} "
+              f"({len(latency)} rows)")
     cfg = FitConfig(safety_margin=args.safety_margin,
                     prior_efficiency=args.prior_efficiency,
-                    pallas_target=args.pallas_target)
+                    pallas_target=args.pallas_target,
+                    latency=latency)
     trace = load_trace(args.trace)
     tunables = fit_trace(trace, cfg, per_layer=not args.site_only)
     print("\n".join(summary_lines(trace, tunables)))
     save_table(args.out, tunables,
-               meta={"trace": args.trace, "n_rows": trace.n_rows})
+               meta={"trace": args.trace, "n_rows": trace.n_rows,
+                     **({"latency_table": args.latency_table}
+                        if args.latency_table else {})})
     print(f"tuned table written to {args.out}")
 
 

@@ -30,6 +30,7 @@ saturated; churny sites (high mode_transitions/steps) get stiffer hysteresis.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 from repro.core.policy import (
     DEFAULT_MIN_WORK_FLOPS,
@@ -68,6 +69,11 @@ class FitConfig:
     # True fits "ragged" (Pallas compacted-grid kernel — the TPU target);
     # False fits "compact" (jnp gather — what CPU serving actually runs).
     pallas_target: bool = False
+    # Measured per-(site, layer, exec_path) wall-clock (an
+    # `repro.obs.latency.LatencyTable`). When set, break-even hit rates,
+    # net-positive admission, and exec-path pins are priced from these
+    # MEASURED latencies instead of the energy-model constants above.
+    latency: Any = None
 
 
 def per_step_costs(rec: SiteTraceRecord) -> tuple[float, float, float]:
@@ -109,6 +115,73 @@ def pick_block_k(rec: SiteTraceRecord, g: float, cfg: FitConfig) -> int:
     return cur
 
 
+def measured_costs(rec: SiteTraceRecord, cfg: FitConfig,
+                   g: float) -> dict[str, Any] | None:
+    """Price the site from MEASURED wall-clock when `cfg.latency` covers it.
+
+    The probe measures the basic-mode dense GEMM (`t_basic`) and each reuse
+    substrate at the site's operating skip rate. The harvest model stays
+    linear in hit rate, but in time units: t_reuse(r) = t_basic + t_book −
+    g·r·t_basic. From the measured point (t_cur at the record's hit rate)
+    the bookkeeping tax and break-even hit rate follow directly:
+
+        t_book     = t_cur − t_basic + g·r_meas·t_basic
+        r*         = t_book / (g·t_basic)
+        net_s      = t_basic − t_cur     (reuse pays, measured, iff > 0)
+
+    Returns None when the table lacks a basic baseline or any reuse path for
+    this site — the caller falls back to the energy-model constants.
+    """
+    lat = cfg.latency
+    if lat is None:
+        return None
+    basic = lat.stat(rec.site, "basic", layer=rec.layer)
+    if basic is None or basic.mean_s <= 0.0:
+        return None
+    paths = {p: st for p, st in lat.paths_for(rec.site, layer=rec.layer).items()
+             if p != "basic" and st.mean_s > 0.0}
+    if not paths:
+        return None
+    cur_path = rec.exec_path if rec.exec_path in paths else \
+        min(paths, key=lambda p: paths[p].mean_s)
+    best_path = min(paths, key=lambda p: paths[p].mean_s)
+    t_basic = basic.mean_s
+    t_cur = paths[cur_path].mean_s
+    t_book = t_cur - t_basic + g * rec.hit_rate * t_basic
+    break_even = max(t_book, 0.0) / max(g * t_basic, 1e-12)
+    return {
+        "t_basic": t_basic,
+        "t_cur": t_cur,
+        "cur_path": cur_path,
+        "t_book": t_book,
+        "break_even": break_even,
+        "net_s": t_basic - t_cur,
+        "best_path": best_path,
+        "t_best": paths[best_path].mean_s,
+    }
+
+
+def measured_latency_note(rec: SiteTraceRecord,
+                          cfg: FitConfig) -> str | None:
+    """Human-readable evidence string when a solve was priced from measured
+    latencies — journaled with retune decisions so the journal records which
+    decisions consumed measured (not constant) inputs."""
+    measured_reuse = rec.tile_skip_rate > 0.0 or (
+        rec.mode == "reuse" and rec.steps > 0
+    )
+    g = rec.harvest_efficiency if measured_reuse else 0.0
+    if g <= 0.0:
+        g = cfg.prior_efficiency
+    meas = measured_costs(rec, cfg, g)
+    if meas is None:
+        return None
+    return (
+        f"measured basic={meas['t_basic'] * 1e6:.0f}us "
+        f"{meas['cur_path']}={meas['t_cur'] * 1e6:.0f}us "
+        f"r*={meas['break_even']:.2f}"
+    )
+
+
 def solve_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunables:
     """Solve one site's tunables from its measured operating point."""
     w_bytes, macs, book_j = per_step_costs(rec)
@@ -119,11 +192,16 @@ def solve_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunabl
     if g <= 0.0:
         g = cfg.prior_efficiency
 
-    saveable_j = saved_per_step_j(w_bytes, macs, g, 1.0)
-    if saveable_j <= 0.0:
-        break_even = 1.0  # nothing to harvest; threshold clamps to max
+    meas = measured_costs(rec, cfg, g)
+    if meas is not None:
+        # Measured pricing: break-even and admission from observed wall-clock.
+        break_even = meas["break_even"]
     else:
-        break_even = book_j / saveable_j
+        saveable_j = saved_per_step_j(w_bytes, macs, g, 1.0)
+        if saveable_j <= 0.0:
+            break_even = 1.0  # nothing to harvest; threshold clamps to max
+        else:
+            break_even = book_j / saveable_j
     sim_threshold = min(
         max(cfg.safety_margin * break_even, cfg.min_threshold),
         cfg.max_threshold,
@@ -133,7 +211,8 @@ def solve_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunabl
     # (harvest at the observed hit rate beats the bookkeeping), else pin it
     # basic — the per-site replacement for the one global small-layer cutoff.
     net_j = saved_per_step_j(w_bytes, macs, g, rec.hit_rate) - book_j
-    if net_j > 0.0:
+    net_positive = meas["net_s"] > 0.0 if meas is not None else net_j > 0.0
+    if net_positive:
         min_work = min(DEFAULT_MIN_WORK_FLOPS,
                        cfg.min_work_admit_factor * rec.work_flops)
     else:
@@ -152,12 +231,26 @@ def solve_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunabl
     block_k = pick_block_k(rec, g, cfg)
     exec_path: str | None = None
     max_active_k: int | None = None
-    if measured_reuse and rec.tile_skip_rate >= cfg.ragged_min_skip:
+    if meas is not None:
+        # Measured gate: pin the compacted tier iff it actually measured
+        # fastest for this site — the measured replacement for the constant
+        # RAGGED_BREAK_EVEN_SKIP threshold (both promotion when the constant
+        # gate would refuse, and demotion when it would promote a site whose
+        # compacted path measures slower).
+        promote = (measured_reuse and rec.tile_skip_rate > 0.0
+                   and meas["best_path"] in ("ragged", "compact"))
+    else:
+        promote = (measured_reuse
+                   and rec.tile_skip_rate >= cfg.ragged_min_skip)
+    if promote:
         compactable = [c for c in BLOCK_K_CHOICES if 2 * c <= rec.in_features]
         if compactable:
             block_k = min(block_k, compactable[-1])
             gk = -(-rec.in_features // block_k)
-            exec_path = "ragged" if cfg.pallas_target else "compact"
+            if meas is not None:
+                exec_path = meas["best_path"]  # fastest MEASURED substrate
+            else:
+                exec_path = "ragged" if cfg.pallas_target else "compact"
             max_active_k = ReusePolicy.ragged_budget(gk, rec.tile_skip_rate)
 
     base = SiteTunables()

@@ -1,0 +1,474 @@
+"""repro.obs — the unified tracing / metrics / measured-latency plane.
+
+Load-bearing properties:
+
+* spans nest (parent ids), carry tags + correlation ids, and the DISABLED
+  path is a shared no-op with near-zero per-call overhead (the <3 % serve
+  acceptance bar, locked here with a generous absolute bound);
+* `events.stamp` is byte-identity when no ids are set — pre-obs consumers
+  emit exactly what they emitted before the obs plane existed;
+* the Prometheus textfile writer and `parse_prometheus` are inverses;
+* the latency table round-trips save→load, falls back layer→None on lookup,
+  and — handed to the harvest model via `FitConfig.latency` — changes fitted
+  tunables vs the constant energy-model pricing (the ROADMAP payoff);
+* the control journal emits schema v3 (stamped when ids are set), still
+  loads v1/v2 emissions, and rejects future versions loudly;
+* checkpoint-vs-tuned-table restore precedence: covered lanes re-sync to the
+  table, uncovered lanes adopt the checkpointed values into the policy
+  table, every resolution journals as a replayable kind="restore" Decision.
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.control.replay import apply_to_engine, replay_rows
+from repro.control.report import (
+    CONTROL_JOURNAL_SCHEMA_VERSION,
+    ControlReport,
+    Decision,
+    DecisionJournal,
+    load_journal,
+)
+from repro.control.restore import resolve_restored_ctrl
+from repro.core import ReuseEngine, ReusePolicy, SiteTunables
+from repro.obs import events
+from repro.obs import trace as obs_trace
+from repro.obs.export import (
+    load_snapshots,
+    parse_prometheus,
+    write_jsonl,
+    write_prometheus,
+)
+from repro.obs.latency import (
+    BASIC_PATH,
+    LatencyTable,
+    LatencyTableError,
+    build_from_spans,
+    load_latency_table,
+    probe_latency_table,
+)
+from repro.obs.metrics import MetricsRegistry
+from repro.tune.harvest import FitConfig, measured_latency_note, solve_site
+from repro.tune.trace import SiteTraceRecord
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_state():
+    """Obs state is module-global (single-threaded host loop); isolate it."""
+    events.clear_ids()
+    obs_trace.disable()
+    obs_trace.drain_spans()
+    yield
+    events.clear_ids()
+    obs_trace.disable()
+    obs_trace.drain_spans()
+    obs_trace._STATE["max_spans"] = 262_144
+
+
+# ------------------------------------------------------------------ tracing
+
+def test_span_nesting_parent_ids_and_tags():
+    obs_trace.enable()
+    with obs_trace.span("outer", phase="serve") as outer:
+        with obs_trace.span("inner") as inner:
+            inner.tag(tokens=3)
+        assert inner.parent_id == outer.span_id
+    rows = obs_trace.spans()
+    assert [r["name"] for r in rows] == ["inner", "outer"]  # close order
+    by_name = {r["name"]: r for r in rows}
+    assert by_name["inner"]["parent_id"] == by_name["outer"]["span_id"]
+    assert by_name["outer"]["parent_id"] == 0
+    assert by_name["inner"]["tokens"] == 3
+    assert by_name["outer"]["phase"] == "serve"
+    assert all(r["dur_s"] >= 0.0 for r in rows)
+
+
+def test_span_records_correlation_ids():
+    obs_trace.enable()
+    with events.context(run="r1", request=7):
+        with obs_trace.span("prefill"):
+            pass
+    with obs_trace.span("bare"):
+        pass
+    rows = {r["name"]: r for r in obs_trace.spans()}
+    assert rows["prefill"]["trace"] == {"run": "r1", "request": 7}
+    assert "trace" not in rows["bare"]
+
+
+def test_disabled_span_is_shared_noop_and_records_nothing():
+    assert not obs_trace.is_enabled()
+    a = obs_trace.span("serve_step", exec_path="compact")
+    b = obs_trace.span("another")
+    assert a is b  # ONE shared no-op object: no per-call allocation
+    with a as sp:
+        val = object()
+        assert sp.sync(val) is val
+        assert sp.tag(k=1) is sp
+    assert obs_trace.spans() == []
+
+
+def test_disabled_span_overhead_is_negligible():
+    """The acceptance bar is <3 % serve-step overhead with obs off; a serve
+    step is milliseconds, so lock an absolute per-call bound with ~30x
+    headroom over the measured dict-lookup cost."""
+    n = 2000
+    t0 = obs_trace.now()
+    for _ in range(n):
+        with obs_trace.span("serve_step"):
+            pass
+    per_call = (obs_trace.now() - t0) / n
+    assert per_call < 10e-6, f"disabled span cost {per_call * 1e6:.2f}us/call"
+
+
+def test_span_buffer_cap_counts_drops():
+    obs_trace.enable(max_spans=2)
+    for i in range(4):
+        with obs_trace.span(f"s{i}"):
+            pass
+    assert len(obs_trace.spans()) == 2
+    assert obs_trace._STATE["dropped"] == 2
+    drained = obs_trace.drain_spans()
+    assert [r["name"] for r in drained] == ["s0", "s1"]
+    assert obs_trace.spans() == [] and obs_trace._STATE["dropped"] == 0
+
+
+def test_write_spans_jsonl_round_trip(tmp_path):
+    obs_trace.enable()
+    with obs_trace.span("a", site="mlp_in"):
+        pass
+    p = tmp_path / "spans.jsonl"
+    assert obs_trace.write_spans_jsonl(str(p)) == 1
+    assert obs_trace.spans() == []  # drained
+    row = json.loads(p.read_text().strip())
+    assert row["name"] == "a" and row["site"] == "mlp_in"
+
+
+# ----------------------------------------------------------- correlation ids
+
+def test_stamp_is_identity_with_no_ids():
+    row = {"kind": "site", "site": "s"}
+    assert events.stamp(row) is row  # byte-identical pre-obs emission
+
+
+def test_context_nesting_restores_outer_ids():
+    events.set_ids(run="R")
+    with events.context(window=3):
+        assert events.current_ids() == {"run": "R", "window": 3}
+        with events.context(window=4, request=9):
+            assert events.current_ids() == {
+                "run": "R", "window": 4, "request": 9}
+        assert events.current_ids() == {"run": "R", "window": 3}
+    assert events.current_ids() == {"run": "R"}
+    stamped = events.stamp({"x": 1})
+    assert stamped == {"x": 1, "trace": {"run": "R"}}
+    events.clear_ids()
+    assert events.current_ids() == {}
+
+
+# ----------------------------------------------------------- metrics/export
+
+def test_registry_keying_and_histogram_percentiles():
+    reg = MetricsRegistry()
+    assert reg.counter("c", site="a") is reg.counter("c", site="a")
+    assert reg.counter("c", site="a") is not reg.counter("c", site="b")
+    h = reg.histogram("lat")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.count == 100 and h.mean == pytest.approx(50.5)
+    assert h.percentile(0.5) == pytest.approx(50.5)
+    assert h.percentile(0.95) == pytest.approx(95.05)
+    s = h.summary()
+    assert s["min"] == 1.0 and s["max"] == 100.0 and "p99" in s
+
+
+def test_prometheus_round_trip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("control_decisions", kind="retune").inc(3)
+    reg.gauge("reuse_site_hit_rate", site="mlp_in").set(0.875)
+    h = reg.histogram("span_serve_step_seconds")
+    for v in (0.001, 0.002, 0.003):
+        h.observe(v)
+    p = tmp_path / "metrics.prom"
+    n = write_prometheus(str(p), reg)
+    assert n > 0
+    parsed = parse_prometheus(p.read_text())
+    assert parsed["control_decisions"]['{kind="retune"}'] == 3.0
+    assert parsed["reuse_site_hit_rate"]['{site="mlp_in"}'] == \
+        pytest.approx(0.875)
+    assert parsed["span_serve_step_seconds_count"][""] == 3.0
+    assert parsed["span_serve_step_seconds_sum"][""] == pytest.approx(0.006)
+    assert parsed["span_serve_step_seconds"]['{quantile="0.5"}'] == \
+        pytest.approx(0.002)
+
+
+def test_parse_prometheus_rejects_untyped_samples():
+    with pytest.raises(ValueError, match="TYPE"):
+        parse_prometheus("orphan_metric 1.0\n")
+    with pytest.raises(ValueError, match="not a prometheus sample"):
+        parse_prometheus("# TYPE x gauge\nx = what\n")
+
+
+def test_jsonl_snapshots_group_and_stamp(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("g").set(1.0)
+    p = tmp_path / "metrics.jsonl"
+    events.set_ids(run="RR")
+    write_jsonl(str(p), reg)
+    reg.gauge("g").set(2.0)
+    write_jsonl(str(p), reg)
+    snaps = load_snapshots(str(p))
+    assert len(snaps) == 2
+    assert snaps[0][0]["value"] == 1.0 and snaps[1][0]["value"] == 2.0
+    assert snaps[0][0]["trace"]["run"] == "RR"
+    assert snaps[0][0]["snap"] < snaps[1][0]["snap"]
+
+
+# ------------------------------------------------------------- latency table
+
+def test_latency_table_layer_fallback_and_paths():
+    t = LatencyTable()
+    t.record("s", None, "basic", 1e-4)
+    t.record("s", None, "dense", 8e-5)
+    t.record("s", 2, "dense", 5e-5)
+    # layer lookup prefers the layer row, falls back to site-wide
+    assert t.stat("s", "dense", layer=2).mean_s == pytest.approx(5e-5)
+    assert t.stat("s", "dense", layer=7).mean_s == pytest.approx(8e-5)
+    assert t.stat("s", "basic", layer=2).mean_s == pytest.approx(1e-4)
+    assert t.stat("s", "ragged") is None
+    paths = t.paths_for("s", layer=2)
+    assert paths["dense"].mean_s == pytest.approx(5e-5)  # layer row wins
+    assert paths["basic"].mean_s == pytest.approx(1e-4)
+
+
+def test_latency_table_save_load_round_trip(tmp_path):
+    t = LatencyTable()
+    for v in (1e-4, 1.2e-4, 1.4e-4):
+        t.record("mlp_in", None, "basic", v)
+    t.record("mlp_in", 0, "compact", 4e-5)
+    p = tmp_path / "lat.json"
+    t.save(str(p), meta={"arch": "qwen3-32b"})
+    r = load_latency_table(str(p))
+    assert r.meta["arch"] == "qwen3-32b"
+    assert len(r) == len(t) == 2
+    st, sr = t.stat("mlp_in", "basic"), r.stat("mlp_in", "basic")
+    assert sr.count == st.count and sr.mean_s == pytest.approx(st.mean_s)
+    assert r.stat("mlp_in", "compact", layer=0).mean_s == pytest.approx(4e-5)
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"kind": "nope", "schema_version": 1}))
+    with pytest.raises(LatencyTableError, match="obs_latency_table"):
+        load_latency_table(str(bad))
+    bad.write_text(json.dumps({"kind": "obs_latency_table",
+                               "schema_version": 99, "rows": []}))
+    with pytest.raises(LatencyTableError, match="schema_version"):
+        load_latency_table(str(bad))
+
+
+def test_build_from_spans_keys_on_tags():
+    rows = [
+        {"name": "site_probe", "dur_s": 1e-4, "site": "s",
+         "exec_path": "basic"},
+        {"name": "site_probe", "dur_s": 2e-4, "site": "s",
+         "exec_path": "basic"},
+        {"name": "serve_step", "dur_s": 9.0},  # no site tag: skipped
+    ]
+    t = build_from_spans(rows)
+    assert len(t) == 1
+    assert t.stat("s", "basic").count == 2
+    assert t.stat("s", "basic").mean_s == pytest.approx(1.5e-4)
+
+
+def test_probe_latency_table_measures_every_viable_path():
+    engine = ReuseEngine()
+    engine.register("s", 64, 32, block_m=2, block_k=32)  # gk=2: compactable
+    table = probe_latency_table(engine, 2, skip_rates={"s": 0.5},
+                                iters=3, warmup=1)
+    assert set(table.paths_for("s")) == {BASIC_PATH, "dense", "compact"}
+    for path, stat in table.paths_for("s").items():
+        assert stat.count == 3 and stat.mean_s > 0.0, path
+    assert table.meta["impl"] == "jnp" and table.meta["batch"] == 2
+    # the probe leaves the trace plane the way it found it (disabled here)
+    assert not obs_trace.is_enabled()
+
+
+# ------------------------------------------- measured pricing in the fitter
+
+def _rec(**kw):
+    base = dict(
+        site="mlp_in", mode="reuse", steps=10, batch=4,
+        in_features=512, out_features=256, block_m=8, block_k=128,
+        block_n=128, tile_skip_rate=0.8, mac_skip_rate=0.7,
+        weight_byte_skip_rate=0.7, hit_rate=0.9, mode_transitions=0,
+        suppressed_flips=0, total_weight_bytes=0.0, total_macs=0.0,
+    )
+    base.update(kw)
+    return SiteTraceRecord(**base)
+
+
+def test_fit_with_latency_table_changes_tunables():
+    """The ROADMAP payoff: the same operating point solves to different
+    tunables when priced from MEASURED wall-clock. Here the constant
+    skip-rate gate would promote the compacted tier, but the measurement
+    says the plain masked walk is the fastest reuse substrate — the
+    measured fit demotes, and the break-even threshold moves too."""
+    rec = _rec()
+    lat = LatencyTable()
+    lat.record(rec.site, None, "basic", 100e-6)
+    lat.record(rec.site, None, "dense", 80e-6)
+    lat.record(rec.site, None, "compact", 150e-6)  # measured SLOWER
+
+    const = solve_site(rec, FitConfig())
+    meas = solve_site(rec, FitConfig(latency=lat))
+    assert const.exec_path == "compact"       # constant gate: skip >= 0.25
+    assert meas.exec_path is None             # measured gate: dense fastest
+    assert meas.sim_threshold != pytest.approx(const.sim_threshold)
+
+    # flip the measurement: compact fastest -> the measured fit pins it even
+    # though nothing else about the record changed
+    lat2 = LatencyTable()
+    lat2.record(rec.site, None, "basic", 100e-6)
+    lat2.record(rec.site, None, "dense", 80e-6)
+    lat2.record(rec.site, None, "compact", 30e-6)
+    fast = solve_site(rec, FitConfig(latency=lat2))
+    assert fast.exec_path == "compact"
+    assert fast.max_active_k is not None
+
+    note = measured_latency_note(rec, FitConfig(latency=lat))
+    assert note is not None and note.startswith("measured basic=")
+    assert measured_latency_note(rec, FitConfig()) is None
+
+
+def test_measured_pricing_falls_back_without_coverage():
+    rec = _rec()
+    empty = LatencyTable()                       # no rows at all
+    no_basic = LatencyTable()
+    no_basic.record(rec.site, None, "dense", 80e-6)  # no baseline
+    for cfg in (FitConfig(latency=empty), FitConfig(latency=no_basic)):
+        assert solve_site(rec, cfg) == solve_site(rec, FitConfig())
+
+
+# ------------------------------------------------------------ journal v3
+
+def test_journal_v3_rows_and_stamping(tmp_path):
+    rep = ControlReport(
+        step=8, interval=1, window_steps={"s": 8},
+        decisions=[Decision(step=8, site="s", kind="retune",
+                            field="sim_threshold", before=0.1, after=0.2,
+                            reason="window 8 steps")],
+        retrace={},
+    )
+    plain = rep.to_dicts()
+    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION == 3
+               for r in plain)
+    assert all("trace" not in r for r in plain)  # no ids -> v2 byte layout
+    with events.context(run="RJ", window=1):
+        stamped = rep.to_dicts()
+    assert all(r["trace"] == {"run": "RJ", "window": 1} for r in stamped)
+
+    p = tmp_path / "journal.jsonl"
+    j = DecisionJournal(str(p))
+    with events.context(run="RJ", window=1):
+        j.append(rep)
+    rows = load_journal(str(p))
+    assert len(rows) == 2 and rows[1]["trace"]["run"] == "RJ"
+    assert replay_rows(rows).ok
+
+
+def test_journal_loads_v1_v2_rejects_future(tmp_path):
+    p = tmp_path / "mixed.jsonl"
+    v1_dec = {"kind": "decision", "schema_version": 1, "site": "s",
+              "decision_kind": "retune", "field": "sim_threshold",
+              "before": 0.1, "after": 0.2, "interval": 1, "step": 4,
+              "reason": "r"}
+    v2_dec = dict(v1_dec, schema_version=2, layer=3, before=0.2, after=0.3,
+                  interval=2)
+    p.write_text(json.dumps(v1_dec) + "\n" + json.dumps(v2_dec) + "\n")
+    rows = load_journal(str(p))
+    assert rows[0]["layer"] is None  # v1 predates per-layer lanes
+    assert rows[1]["layer"] == 3
+    assert replay_rows(rows).ok
+
+    fut = tmp_path / "future.jsonl"
+    fut.write_text(json.dumps(dict(v1_dec, schema_version=4)) + "\n")
+    with pytest.raises(ValueError, match=r"future.jsonl:1.*schema_version 4"):
+        load_journal(str(fut))
+
+
+def test_decision_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        Decision(step=0, site="s", kind="vibes", field="f",
+                 before=0, after=1, reason="")
+
+
+# ------------------------------------------------------- restore precedence
+
+def test_restore_precedence_table_wins_uncovered_adopts(tmp_path):
+    # site "a" has a tuned-table row; site "b" does not
+    table_row = SiteTunables(sim_threshold=0.4, min_work_flops=1e5)
+    engine = ReuseEngine(
+        policy=ReusePolicy(site_tunables={"a": table_row}))
+    engine.register("a", 64, 32, block_m=2, block_k=32)
+    engine.register("b", 64, 32, block_m=2, block_k=32)
+    cache = engine.init_cache(2)
+    default_thr = ReusePolicy().resolve("b").sim_threshold
+
+    # simulate a restored checkpoint whose ctrl lanes drifted from both the
+    # table ("a": 0.9 vs fitted 0.4) and the defaults ("b": 0.77)
+    for name, thr in (("a", 0.9), ("b", 0.77)):
+        cache[name] = dict(cache[name], ctrl=dict(
+            cache[name]["ctrl"],
+            sim_threshold=jnp.full_like(
+                cache[name]["ctrl"]["sim_threshold"], thr)))
+
+    jpath = tmp_path / "restore.jsonl"
+    decisions = resolve_restored_ctrl(
+        engine, cache, journal=DecisionJournal(str(jpath)), step=0)
+
+    assert decisions and all(d.kind == "restore" for d in decisions)
+    # covered lane: the TABLE wins, checkpoint value journaled as `before`
+    a_thr = float(np.atleast_1d(
+        np.asarray(cache["a"]["ctrl"]["sim_threshold"]))[0])
+    assert a_thr == pytest.approx(0.4)
+    d_a = next(d for d in decisions
+               if d.site == "a" and d.field == "sim_threshold")
+    assert d_a.before == pytest.approx(0.9) and d_a.after == pytest.approx(0.4)
+    # uncovered lane: checkpoint ADOPTED into the policy table and kept live
+    b_thr = float(np.atleast_1d(
+        np.asarray(cache["b"]["ctrl"]["sim_threshold"]))[0])
+    assert b_thr == pytest.approx(0.77)
+    assert engine.policy.site_tunables["b"].sim_threshold == \
+        pytest.approx(0.77)
+    d_b = next(d for d in decisions
+               if d.site == "b" and d.field == "sim_threshold")
+    assert d_b.before == pytest.approx(default_thr)
+    assert d_b.after == pytest.approx(0.77)
+
+    # the journal is schema v3 and REPLAYABLE: driving the restore rows
+    # through a fresh engine reproduces the resolved thresholds
+    rows = load_journal(str(jpath))
+    assert all(r["schema_version"] == 3 for r in rows)
+    assert replay_rows(rows).ok
+    fresh = ReuseEngine(policy=ReusePolicy(site_tunables={"a": table_row}))
+    fresh.register("a", 64, 32, block_m=2, block_k=32)
+    fresh.register("b", 64, 32, block_m=2, block_k=32)
+    fcache = fresh.init_cache(2)
+    apply_to_engine(rows, fresh, fcache)
+    assert fresh.policy.resolve("a").sim_threshold == pytest.approx(0.4)
+    assert fresh.policy.resolve("b").sim_threshold == pytest.approx(0.77)
+
+
+def test_restore_noop_when_checkpoint_matches(tmp_path):
+    engine = ReuseEngine()
+    engine.register("s", 64, 32, block_m=2, block_k=32)
+    cache = engine.init_cache(2)
+    # ctrl lanes fresh from init: nothing differs, nothing to journal
+    jpath = tmp_path / "noop.jsonl"
+    decisions = resolve_restored_ctrl(
+        engine, cache, journal=DecisionJournal(str(jpath)), step=0)
+    assert decisions == []
+    assert not jpath.exists()  # empty resolutions append nothing
+    assert "s" not in engine.policy.site_tunables  # no spurious adoption
