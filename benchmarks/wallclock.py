@@ -14,10 +14,21 @@ Methodology notes:
 * Operands are integer-valued floats (|v| small), so every path's f32
   accumulation is EXACT regardless of summation order — output equality
   across paths is asserted bitwise, not allclose.
-* The Pallas paths run in interpret mode on CPU: the grid loop is unrolled
-  into the jitted HLO, so step count translates to executed work exactly the
-  way it does on the TPU pipeline (relative ordering is the reproduced
-  object; absolute microseconds are CPU numbers).
+* The kernel/ragged paths of the GRID-STEP comparison run interpret-mode
+  Pallas on CPU: the grid loop is unrolled into the jitted HLO, so step
+  count translates to executed work exactly the way it does on the TPU
+  pipeline (relative ordering is the reproduced object; absolute
+  microseconds are CPU numbers). Their rows are tagged
+  backend="pallas_interpret" so downstream pricing can never mistake them
+  for compiled measurements.
+* The SWEEP (on by default; --no-sweep disables) is all-compiled: every
+  path dispatches through kernels/backend.resolve(None) — the process's
+  best compiled substrate — across skip ∈ {0, .25, .5, .75, .9}, checked
+  bitwise against the interpret-mode Pallas oracle per point. The sweep
+  re-derives the break-even skip from the measured curves
+  (tune.harvest.derive_break_even_skip), records the exec-path gate that
+  break-even implies, and validates the curves against the roofline
+  kernel work model (roofline.validate.validate_kernel_sweep).
 * Results land in BENCH_kernels.json — the perf TRAJECTORY artifact: each run
   APPENDS one timestamped JSONL row (a legacy single-object file from older
   builds is absorbed as the first row), so consecutive runs accumulate a real
@@ -39,8 +50,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn_stats
+from repro.core.policy import RAGGED_BREAK_EVEN_SKIP, ReusePolicy
+from repro.core.reuse_cache import ReuseSiteSpec
 from repro.core.similarity import block_zero_mask
+from repro.kernels import backend as kernel_backend
 from repro.kernels import ops
+from repro.roofline.validate import validate_kernel_sweep
+from repro.tune.harvest import derive_break_even_skip
+
+# Compiled skip-rate sweep operating points: the regimes the paper's
+# Table I workloads span, parity point (0) to deep-reuse decode (0.9).
+SWEEP_SKIPS = (0.0, 0.25, 0.5, 0.75, 0.9)
 
 
 def load_runs(path: str) -> list[dict]:
@@ -103,6 +123,101 @@ def build_stream(rng, m, k, bm, bk, skip_prob):
     return delta
 
 
+def run_sweep(m, k, n, bm, bn, bk, *, skips=SWEEP_SKIPS):
+    """Compiled ragged-vs-skip-rate sweep: dense vs compiled reuse tiers.
+
+    Every path here runs through `backend.resolve(None)` — the process's
+    best COMPILED substrate (XLA tier on CPU, Pallas on TPU) — and each
+    measurement is checked BITWISE against the interpret-mode Pallas masked
+    kernel on the same inputs (the oracle the parity suite pins). The sweep
+    yields the measured break-even skip (tune.harvest.derive_break_even_skip),
+    the exec-path gate re-derived from it, and the roofline work-model
+    validation (repro.roofline.validate.validate_kernel_sweep).
+    """
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.integers(-3, 4, size=(k, n)).astype(np.float32))
+    prev = jnp.asarray(rng.integers(-5, 6, size=(m, n)).astype(np.float32))
+    gk = k // bk
+    tag = kernel_backend.tag()  # compiled substrate stamp, one per process
+    rows = []
+    for target in skips:
+        delta = jnp.asarray(build_stream(rng, m, k, bm, bk, target))
+        mask = block_zero_mask(delta, bm, bk)
+        mask_np = np.asarray(mask)
+        measured_skip = 1.0 - float(mask_np.mean())
+        budget = max(1, int(mask_np.sum(axis=1).max()))
+        k_mask = jnp.asarray(mask_np.max(axis=0).astype(np.int32))
+        shared_budget = max(1, int(mask_np.max(axis=0).sum()))
+        oracle = ops.reuse_matmul(
+            delta, w, prev, mask, block_m=bm, block_n=bn, block_k=bk,
+            interpret=True)
+
+        paths = {
+            "dense_gemm": (
+                jax.jit(lambda d, w, p: p + jnp.dot(
+                    d, w, preferred_element_type=jnp.float32)),
+                (delta, w, prev), None),
+            "kernel": (
+                jax.jit(lambda d, w, p, ms: ops.reuse_matmul(
+                    d, w, p, ms, block_m=bm, block_n=bn, block_k=bk)),
+                (delta, w, prev, mask), None),
+            "compact": (
+                jax.jit(lambda d, w, p, km: ops.reuse_matmul_compact(
+                    d, w, p, km, block_k=bk, max_blocks=shared_budget)),
+                (delta, w, prev, k_mask), shared_budget),
+            "ragged": (
+                jax.jit(lambda d, w, p, ms: ops.reuse_matmul_ragged(
+                    d, w, p, ms, block_m=bm, block_n=bn, block_k=bk,
+                    max_active_k=budget)),
+                (delta, w, prev, mask), budget),
+        }
+        for name, (fn, fn_args, max_ak) in paths.items():
+            stats = time_fn_stats(fn, *fn_args)
+            exact = bool(jnp.all(fn(*fn_args) == oracle))
+            rows.append({
+                "skip": float(target),
+                "measured_skip_rate": measured_skip,
+                "path": name,
+                "us": stats["p50_us"], "p95_us": stats["p95_us"],
+                "exact_vs_oracle": exact,
+                "m": m, "k": k, "n": n,
+                "block_m": bm, "block_n": bn, "block_k": bk,
+                "max_active_k": max_ak,
+                **tag,
+            })
+            emit(f"wallclock/sweep/{name}@{target}", stats["p50_us"],
+                 f"exact={exact};backend={tag['backend']}")
+
+    by_skip = {}
+    for r in rows:
+        by_skip.setdefault(r["skip"], {})[r["path"]] = r["us"]
+    # The break-even being derived is the COMPACTION crossing (it gates
+    # promotion to ragged/compact): the masked "kernel" path does dense
+    # work by construction, so near-parity noise on it must not move the
+    # gate — only the compaction paths compete against dense here.
+    points = [
+        (s, min(d["compact"], d["ragged"]), d["dense_gemm"])
+        for s, d in sorted(by_skip.items())
+    ]
+    derived = derive_break_even_skip(points)
+    # Gate re-derived from the compiled curves: a derived 2.0 ("compaction
+    # never wins on this shape") demotes every skip level back to dense.
+    policy = ReusePolicy(ragged_break_even_skip=derived)
+    spec = ReuseSiteSpec(name="sweep", in_features=k, out_features=n,
+                         block_m=bm, block_k=bk, block_n=bn)
+    gate = {f"{s:.2f}": policy.decide_exec_path(spec, s, impl="jnp")
+            for s in skips}
+    validation = validate_kernel_sweep(rows)
+    return {
+        "skips": list(skips),
+        "rows": rows,
+        "derived_break_even_skip": derived,
+        "default_break_even_skip": RAGGED_BREAK_EVEN_SKIP,
+        "gate_exec_path": gate,
+        "roofline": validation,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Wall-clock per reuse execution path (BENCH_kernels.json)")
@@ -111,6 +226,9 @@ def main(argv=None):
     ap.add_argument("--skip", type=float, default=0.80,
                     help="target tile-skip probability of the stream")
     ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the compiled skip-rate sweep (grid-step "
+                    "comparison only)")
     args = ap.parse_args(argv)
 
     if args.tiny:
@@ -170,6 +288,17 @@ def main(argv=None):
         ),
     }
 
+    # Substrate provenance per path: the kernel/ragged grid-step comparison
+    # deliberately runs interpret-mode Pallas (grid-step accounting is the
+    # reproduced object); the jnp paths are compiled XLA.
+    path_tags = {
+        "dense_gemm": kernel_backend.tag(kernel_backend.XLA),
+        "masked_ref": kernel_backend.tag(kernel_backend.XLA),
+        "kernel": kernel_backend.tag(kernel_backend.INTERPRET),
+        "ragged": kernel_backend.tag(kernel_backend.INTERPRET),
+        "compact": kernel_backend.tag(kernel_backend.XLA),
+    }
+
     results = {}
     for name, (fn, fn_args, grid_steps) in paths.items():
         stats = time_fn_stats(fn, *fn_args)
@@ -184,6 +313,7 @@ def main(argv=None):
             "p95_us": stats["p95_us"],
             "grid_steps": grid_steps,
             "exact_vs_oracle": exact,
+            **path_tags[name],
         }
         emit(f"wallclock/{name}", us,
              f"grid_steps={grid_steps};exact={exact};"
@@ -199,9 +329,25 @@ def main(argv=None):
             "block_k": bk, "tile_skip_rate": float(skip_rate),
             "max_active_k": budget, "gk": gk,
         },
+        "substrate": kernel_backend.tag(),
         "results": results,
         "ragged_vs_kernel_speedup": ragged_speedup,
     }
+
+    if not args.no_sweep:
+        sweep = run_sweep(m, k, n, bm, bn, bk)
+        doc["sweep"] = sweep
+        be = sweep["derived_break_even_skip"]
+        val = sweep["roofline"]
+        print(f"sweep: derived_break_even_skip="
+              f"{'never' if be >= 2.0 else f'{be:.2f}'} "
+              f"(default {RAGGED_BREAK_EVEN_SKIP}) "
+              f"gate={sweep['gate_exec_path']}")
+        print(f"sweep: roofline predicted_break_even="
+              f"{val['predicted_break_even_skip']:.2f} "
+              f"direction_agreement={val['direction_agreement']:.2f} "
+              f"ok={val['ok']}")
+
     n_runs = append_run(args.out, doc)
     print(f"skip_rate={skip_rate:.2f} budget={budget}/{gk} "
           f"ragged_vs_kernel_speedup={ragged_speedup:.2f}x -> {args.out} "
@@ -213,6 +359,14 @@ def main(argv=None):
         assert ragged_speedup > 1.0, (
             "ragged compacted grid must beat the masked full grid at "
             f">=70% skip (got {ragged_speedup:.2f}x)")
+    if "sweep" in doc:
+        for r in doc["sweep"]["rows"]:
+            assert r["exact_vs_oracle"], (
+                f"compiled {r['path']}@skip={r['skip']} diverged from the "
+                "interpret-mode oracle")
+        assert doc["sweep"]["roofline"]["ok"], (
+            "compiled sweep disagrees with the roofline kernel work model "
+            f"beyond tolerance: {doc['sweep']['roofline']}")
     return doc
 
 

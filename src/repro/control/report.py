@@ -128,6 +128,22 @@ class DecisionJournal:
                 f.write(json.dumps(row) + "\n")
                 self.rows_written += 1
 
+    def note(self, **fields: Any) -> None:
+        """Append one kind="note" row outside any ControlReport: operational
+        facts that belong in the audit stream but move no knob — e.g. an
+        interpret-measured latency table fed to a compiled-mode run. Loaders
+        keep notes (load_journal accepts any kind); replay ignores them (it
+        only chains kind="decision" rows)."""
+        from repro.obs.events import stamp
+
+        row = stamp(dict(
+            kind="note", ts=time.time(),
+            schema_version=CONTROL_JOURNAL_SCHEMA_VERSION, **fields,
+        ))
+        with open(self.path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+            self.rows_written += 1
+
 
 def load_journal(path: str) -> list[dict[str, Any]]:
     """Parse a decision journal back into rows (audit/replay).

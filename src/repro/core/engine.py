@@ -55,6 +55,34 @@ def clamp_budget(max_active_k: int | None, gk: int) -> int:
     return _clamp(max_active_k, gk)
 
 
+@jax.jit
+def _ctrl_snapshot_device(cache: dict[str, Any]) -> dict[str, Any]:
+    """ONE traced pass over the whole cache pytree gathering everything the
+    host-side policy pass reads: per-layer sim_ema means, the ctrl lanes, and
+    the sensor tile sums. Before this existed, refresh_modes/refresh_exec_
+    paths issued ~7 device→host syncs PER SITE per control interval; now the
+    reductions run in one compiled executable and the host pulls one tiny
+    pytree (see ReuseEngine.ctrl_snapshot)."""
+    snap: dict[str, Any] = {}
+    for name, entry in cache.items():
+        s: dict[str, jax.Array] = {}
+        ctrl = entry.get("ctrl")
+        if ctrl is not None:
+            sim = entry["sim_ema"]
+            sim_l = sim if sim.ndim == 0 else jnp.mean(sim, axis=-1)
+            s["sim_l"] = jnp.atleast_1d(sim_l).astype(jnp.float32)
+            s["mode_id"] = jnp.atleast_1d(ctrl["mode_id"])
+            s["sim_threshold"] = jnp.atleast_1d(ctrl["sim_threshold"])
+            s["min_work"] = jnp.atleast_1d(ctrl["min_work"])
+            s["cooldown"] = jnp.atleast_1d(ctrl["cooldown"])
+        sensor = entry.get("sensor")
+        if sensor is not None:
+            s["skipped"] = jnp.sum(sensor["skipped_tiles"])
+            s["computed"] = jnp.sum(sensor["computed_tiles"])
+        snap[name] = s
+    return snap
+
+
 @dataclasses.dataclass
 class ReuseEngine:
     policy: ReusePolicy = dataclasses.field(default_factory=ReusePolicy)
@@ -292,6 +320,12 @@ class ReuseEngine:
 
     # -------------------------------------------------- host-side policy pass
 
+    def ctrl_snapshot(self, cache: dict[str, Any]) -> dict[str, Any]:
+        """Pull the policy pass's inputs for ALL sites in one device round
+        trip: the traced `_ctrl_snapshot_device` reduces on device, a single
+        `jax.device_get` materializes the result as host numpy."""
+        return jax.device_get(_ctrl_snapshot_device(cache))
+
     def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
         """Host-side policy pass: one BATCHED per-layer decide per site.
 
@@ -313,21 +347,22 @@ class ReuseEngine:
         {site: "exec:<path>"} — callers rebuild the jitted step exactly when
         this dict is non-empty."""
         self.last_mode_events = []
+        snap = self.ctrl_snapshot(cache)
         for name, spec in self.sites.items():
             entry = cache[name]
             ctrl = entry.get("ctrl")
             if ctrl is None:
                 continue
-            sim = np.asarray(entry["sim_ema"], np.float64)
+            s = snap[name]
             # [L, M] stacked / [M] unstacked / scalar legacy → per-layer [L]
-            sim_l = np.atleast_1d(sim if sim.ndim == 0 else sim.mean(axis=-1))
-            mode_id = self.entry_mode_ids(entry)
+            sim_l = np.asarray(s["sim_l"], np.float64)
+            mode_id = np.asarray(s["mode_id"])
             n_lanes = mode_id.shape[0]
             if sim_l.shape[0] != n_lanes:
                 sim_l = np.broadcast_to(sim_l, (n_lanes,))
-            thr = np.atleast_1d(np.asarray(ctrl["sim_threshold"], np.float64))
-            mw = np.atleast_1d(np.asarray(ctrl["min_work"], np.float64))
-            cd = np.atleast_1d(np.asarray(ctrl["cooldown"], np.int64))
+            thr = np.asarray(s["sim_threshold"], np.float64)
+            mw = np.asarray(s["min_work"], np.float64)
+            cd = np.asarray(s["cooldown"], np.int64)
             stacked = self.stacking.get(name, 0) > 0
             ts = [
                 self.policy.resolve(name, layer=layer if stacked else None)
@@ -364,7 +399,7 @@ class ReuseEngine:
                     self.exec_cooldown.get(name, 0),
                     int(hyst[applied].max()),
                 )
-            shape = np.shape(np.asarray(ctrl["mode_id"]))
+            shape = jnp.shape(ctrl["mode_id"])
             entry = dict(entry, ctrl=dict(
                 ctrl,
                 mode_id=jnp.asarray(
@@ -373,9 +408,11 @@ class ReuseEngine:
                     new_cd.reshape(shape), jnp.int32),
             ))
             cache[name] = entry
-        return self.refresh_exec_paths(cache)
+        return self.refresh_exec_paths(cache, snapshot=snap)
 
-    def refresh_exec_paths(self, cache: dict[str, Any]) -> dict[str, str]:
+    def refresh_exec_paths(
+        self, cache: dict[str, Any], *, snapshot: dict[str, Any] | None = None,
+    ) -> dict[str, str]:
         """Promote/demote execution substrates from MEASURED skip rates.
 
         Cumulative tile counters smooth the signal; exec flips carry their
@@ -390,13 +427,15 @@ class ReuseEngine:
         sites that moved."""
         from repro.core.reuse_cache import resolve_exec_path
 
+        if snapshot is None:
+            snapshot = self.ctrl_snapshot(cache)
         changed: dict[str, str] = {}
         for name, spec in self.sites.items():
-            sensor = cache[name].get("sensor")
-            if sensor is None:
+            s = snapshot.get(name, {})
+            if "skipped" not in s:
                 continue
-            skipped = float(jnp.sum(sensor["skipped_tiles"]))
-            computed = float(jnp.sum(sensor["computed_tiles"]))
+            skipped = float(s["skipped"])
+            computed = float(s["computed"])
             total = skipped + computed
             if total <= 0:
                 continue

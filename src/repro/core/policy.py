@@ -53,7 +53,12 @@ DEFAULT_HYSTERESIS_STEPS = 1
 # grid on Pallas, gathered GEMM on jnp) beats the masked full-grid walk.
 # Model: the compacted grid runs ceil(occupancy · headroom · gk) of gk steps
 # but adds the per-row index/count bookkeeping and risks the overflow
-# fallback; below ~25 % skip the shrink cannot amortize either.
+# fallback; below ~25 % skip the shrink cannot amortize either. This is the
+# MODELED default only: `ReusePolicy.ragged_break_even_skip` carries the live
+# gate, and `repro.tune.harvest.derive_break_even_skip` re-derives it from
+# the compiled skip-rate sweep in the BENCH_kernels.json trajectory (a value
+# > 1.0 means the compacted tier never won — the gate then demotes every
+# site to the masked/dense walk).
 RAGGED_BREAK_EVEN_SKIP = 0.25
 # Budget headroom over the measured occupancy, so mild skip-rate jitter does
 # not trip the (full-extent) overflow fallback every few steps.
@@ -137,6 +142,10 @@ class ReusePolicy:
     dataflow_output_bias: float = 1.0  # >1 prefers output-stationary
     hysteresis_margin: float = DEFAULT_HYSTERESIS_MARGIN
     hysteresis_steps: int = DEFAULT_HYSTERESIS_STEPS
+    # The skip-rate gate for promoting a site onto a compacted tier. Defaults
+    # to the modeled constant; a measured compiled sweep re-derives it
+    # (harvest.derive_break_even_skip) — > 1.0 disables promotion entirely.
+    ragged_break_even_skip: float = RAGGED_BREAK_EVEN_SKIP
     # ... plus the per-site table that overrides them (fitted by repro.tune).
     site_tunables: dict[str, SiteTunables] = dataclasses.field(
         default_factory=dict
@@ -248,7 +257,7 @@ class ReusePolicy:
         if t.exec_path is not None:
             return t.exec_path
         gk = -(-spec.in_features // spec.block_k)
-        if gk >= 2 and skip_rate >= RAGGED_BREAK_EVEN_SKIP:
+        if gk >= 2 and skip_rate >= self.ragged_break_even_skip:
             return "ragged" if impl != "jnp" else "compact"
         return default_exec_path(impl)
 

@@ -22,10 +22,12 @@ every layer, and a host-side mode flip is an array write, never a retrace. A
 string `mode` ("reuse" | "basic") keeps the static single-branch dispatch for
 explicitly pinned sites, tests and benchmarks.
 
-`impl` selects the execution substrate:
+`impl` selects the execution substrate (resolved by kernels/backend.py):
     "jnp"              — pure-jnp semantics (fast on CPU; what the dry-run lowers)
-    "pallas_interpret" — the real kernels, interpreted on CPU (tests)
-    "pallas"           — the real kernels, compiled for TPU (target hardware)
+    "pallas_interpret" — the real kernels, interpreted on CPU (EXPLICIT test mode)
+    "pallas"           — best compiled substrate: compiled Pallas on TPU, the
+                         compiled-XLA tier (kernels/xla_tier.py) on hosts with
+                         no Pallas lowering — never silent interpret fallback
 
 `spec.exec_path` selects the reuse-mode GEMM within a substrate (see
 kernels/ops.py): "kernel" masked full grid, "ragged" compacted grid,
@@ -56,6 +58,16 @@ class ReuseStats(NamedTuple):
     skip_fraction: jax.Array  # fraction of weight tiles skipped this call
 
 
+def _interpret_arg(impl: str) -> bool | None:
+    """The ONE interpret value threaded into every kernel wrapper call.
+
+    True only for the explicit interpret test mode; None otherwise, which
+    `kernels.backend.resolve` turns into the best compiled substrate for this
+    process (compiled Pallas on TPU, compiled-XLA elsewhere).
+    """
+    return True if impl == "pallas_interpret" else None
+
+
 def _encode(
     xm: jax.Array, cache: dict[str, jax.Array], spec: ReuseSiteSpec,
     w_dtype, impl: str,
@@ -71,7 +83,7 @@ def _encode(
     cur_q, delta, mask = ops.delta_quant_fused(
         xm, cache["prev_q"], cache["scale"],
         block_m=spec.block_m, block_k=spec.block_k,
-        delta_dtype=w_dtype, interpret=(impl != "pallas"),
+        delta_dtype=w_dtype, interpret=_interpret_arg(impl),
     )
     skip = 1.0 - jnp.mean(mask.astype(jnp.float32))
     return DeltaEncoding(delta=delta, cur_q=cur_q, block_mask=mask,
@@ -124,7 +136,7 @@ def _reuse_eval(
     path = resolve_exec_path(spec, impl)
     gm, gk = enc.block_mask.shape
     gn = -(-n // spec.block_n)
-    interpret = impl != "pallas"
+    interpret = _interpret_arg(impl)
     sel = None
     dma_issued = None
     grid_steps = None

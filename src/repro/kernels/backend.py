@@ -1,0 +1,185 @@
+"""Compiled execution plane: resolve the best kernel substrate ONCE per process.
+
+Before this module every kernel wrapper took `interpret: bool` with divergent
+defaults (`ops.py` said True, the kernel modules said False), so "what actually
+runs" depended on which layer you entered through — and on CPU everything
+silently fell back to interpret-mode Pallas, pricing the policy's break-even
+constants against a cost model that is 20-80x off compiled reality.
+
+Now there is one resolution, cached per process:
+
+    "pallas"     — compiled Pallas (TPU devices present)
+    "pallas_cpu" — compiled CPU Pallas lowering (probed; jaxlib-dependent)
+    "xla"        — semantics-identical compiled-XLA tier (kernels/xla_tier.py)
+    "interpret"  — interpret-mode Pallas, EXPLICIT test mode only
+
+`ops.py` wrappers call `resolve(interpret=...)`: `None` (the default) picks the
+best compiled substrate; `True` is the explicit interpret test mode; `False`
+forces the best compiled Pallas variant (raises where none exists — no silent
+interpret fallback ever again). `reuse_linear` maps its `impl` string through
+`for_impl` so "pallas" on a CPU-only host degrades to the compiled-XLA tier
+instead of crashing or interpreting.
+
+`tag()` returns the provenance dict ({backend, interpret, jax, jaxlib}) that
+every BENCH_kernels.json row and latency_table.json entry now carries, so
+compiled and interpret measurements can never again be conflated in a
+trajectory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Substrate",
+    "best",
+    "for_impl",
+    "resolve",
+    "tag",
+    "describe",
+    "PALLAS",
+    "PALLAS_CPU",
+    "XLA",
+    "INTERPRET",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Substrate:
+    """One resolved execution substrate for the reuse kernels.
+
+    use_pallas — route through the Pallas kernels (compiled or interpret);
+                 False routes through the compiled-XLA tier (xla_tier.py).
+    interpret  — Pallas interpret mode (only meaningful with use_pallas).
+    compiled   — the numbers this substrate produces are compiled-mode truth;
+                 False marks the explicit interpret test mode.
+    """
+
+    name: str
+    use_pallas: bool
+    interpret: bool
+    compiled: bool
+
+
+PALLAS = Substrate("pallas", use_pallas=True, interpret=False, compiled=True)
+PALLAS_CPU = Substrate(
+    "pallas_cpu", use_pallas=True, interpret=False, compiled=True
+)
+XLA = Substrate("xla", use_pallas=False, interpret=False, compiled=True)
+INTERPRET = Substrate(
+    "interpret", use_pallas=True, interpret=True, compiled=False
+)
+
+
+def _probe_compiled_pallas_cpu() -> bool:
+    """Can this jaxlib compile a Pallas kernel for the CPU backend?
+
+    Current jaxlib CPU lowering raises "Only interpret mode is supported on
+    CPU backend" — but that is a jaxlib property, not a law; probe instead of
+    assuming so a capable jaxlib is picked up automatically.
+    """
+    try:
+        from jax.experimental import pallas as pl
+
+        def _k(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        x = jnp.ones((8, 128), jnp.float32)
+        out = pl.pallas_call(
+            _k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+        jax.block_until_ready(out)
+        return True
+    except Exception:
+        return False
+
+
+@functools.lru_cache(maxsize=1)
+def best() -> Substrate:
+    """The best compiled substrate on this process's default backend.
+
+    TPU → compiled Pallas; CPU with a Pallas-capable jaxlib → compiled CPU
+    Pallas; otherwise the compiled-XLA tier. Never resolves to interpret —
+    interpret survives only as an explicit request.
+    """
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return PALLAS
+    if _probe_compiled_pallas_cpu():
+        return PALLAS_CPU
+    return XLA
+
+
+def for_impl(impl: str) -> Substrate:
+    """Map reuse_linear's `impl` string to a substrate.
+
+    "jnp"              → compiled-XLA tier (pure-jnp semantics, as before)
+    "pallas_interpret" → interpret-mode Pallas (EXPLICIT test mode)
+    "pallas"           → best compiled substrate for this process — compiled
+                         Pallas on TPU, compiled-XLA on a CPU-only host
+                         (previously this silently interpreted).
+    """
+    if impl == "jnp":
+        return XLA
+    if impl == "pallas_interpret":
+        return INTERPRET
+    if impl == "pallas":
+        return best()
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def resolve(interpret: bool | None) -> Substrate:
+    """Resolve a kernel wrapper's `interpret` argument to a substrate.
+
+    None  → best compiled substrate (the only default anywhere now)
+    True  → interpret-mode Pallas (explicit test mode)
+    False → best compiled Pallas; raises on a host with none rather than
+            silently interpreting (the bug class this module deletes).
+    """
+    if interpret is None:
+        return best()
+    if interpret:
+        return INTERPRET
+    sub = best()
+    if not sub.use_pallas:
+        raise ValueError(
+            "interpret=False requested but no compiled Pallas lowering exists "
+            f"on backend {jax.default_backend()!r}; pass interpret=None to "
+            "use the compiled-XLA tier or interpret=True for the explicit "
+            "interpret test mode"
+        )
+    return sub
+
+
+def tag(sub: Substrate | None = None) -> dict:
+    """Provenance stamp for benchmark rows and latency-table entries."""
+    if sub is None:
+        sub = best()
+    return {
+        "backend": sub.name,
+        "interpret": sub.interpret,
+        "jax_version": jax.__version__,
+        "jaxlib_version": _jaxlib_version(),
+    }
+
+
+def _jaxlib_version() -> str:
+    try:
+        import jaxlib
+
+        return jaxlib.__version__
+    except Exception:  # pragma: no cover - jaxlib always ships with jax
+        return "unknown"
+
+
+def describe() -> str:
+    """One-line human summary (serve/bench startup logs)."""
+    sub = best()
+    return (
+        f"backend={sub.name} interpret={sub.interpret} "
+        f"platform={jax.default_backend()} jax={jax.__version__}"
+    )

@@ -1,15 +1,17 @@
 """Public kernel API: padding, batch flattening, path dispatch.
 
 Execution paths (per DESIGN.md §2; `ReuseSiteSpec.exec_path` selects one):
-  "kernel"  — Pallas block-skip GEMM on the FULL (gm, gn, gk) grid: skipped
-              tiles suppress the weight DMA and the MXU op but still cost a
-              grid step (TPU target, interpret=True on CPU).
-  "ragged"  — Pallas compacted-grid GEMM: the grid k-extent is a static
-              budget `max_active_k` < gk; scalar-prefetched front-compacted
-              indices walk only the ACTIVE tiles, so skipped tiles cost zero
-              grid steps. Runtime falls back to the full extent when a row's
-              live count overflows the budget (correctness never depends on
-              the policy's guess).
+  "kernel"  — block-skip GEMM on the FULL (gm, gn, gk) grid: skipped tiles
+              suppress the weight DMA and the MXU op but still cost a grid
+              step. Compiled Pallas on TPU; the compiled-XLA masked lowering
+              (kernels/xla_tier.py) where no Pallas lowering exists.
+  "ragged"  — compacted-grid GEMM: the grid k-extent is a static budget
+              `max_active_k` < gk; front-compacted indices walk only the
+              ACTIVE tiles, so skipped tiles cost zero grid steps. Compiled
+              Pallas scalar-prefetch on TPU; a `jnp.take` gather GEMM on the
+              compiled-XLA tier. Runtime falls back to the full extent when a
+              row's live count overflows the budget (correctness never
+              depends on the policy's guess).
   "compact" — gather the nonzero K-blocks of Δ and the matching W row-blocks,
               dense GEMM on the compacted operands (MegaBlocks-style;
               beyond-paper). Pure jnp, shardable under pjit, and the path the
@@ -19,6 +21,14 @@ Execution paths (per DESIGN.md §2; `ReuseSiteSpec.exec_path` selects one):
               negative result: costs MORE than dense — kept as a benchmark).
   "dense"   — O_p-free ordinary GEMM (the "basic kernel" / reuse-OFF mode).
   "ref"     — oracle (tests only).
+
+Substrate resolution (kernels/backend.py): every wrapper's `interpret`
+parameter defaults to None = "best compiled substrate for this process",
+resolved ONCE per process. `interpret=True` is the EXPLICIT interpret-mode
+test path; `interpret=False` demands compiled Pallas and raises where none
+exists. The old divergent defaults (ops.py said True, the kernel modules said
+False) are gone — callers thread one explicit value or accept the resolved
+compiled default.
 """
 
 from __future__ import annotations
@@ -29,7 +39,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.delta import compact_block_indices, compact_rows
+from repro.kernels import backend as _backend
 from repro.kernels import ref as _ref
+from repro.kernels import xla_tier as _xla
 from repro.kernels.delta_quant import delta_quant as delta_quant_kernel
 from repro.kernels.reuse_matmul import reuse_matmul as _reuse_matmul_kernel
 from repro.kernels.reuse_matmul import skip_sel, weight_dma_tiles
@@ -82,21 +94,27 @@ def reuse_matmul(
     block_n: int = 128,
     block_k: int = 256,
     dataflow: str = "output",
-    interpret: bool = True,
+    interpret: bool | None = None,
     sel: jax.Array | None = None,
 ) -> jax.Array:
-    """Padded/validated entry to the Pallas block-skip kernel."""
+    """Padded/validated entry to the block-skip GEMM (masked full grid)."""
+    sub = _backend.resolve(interpret)
     m, n = prev_out.shape
     dp = _pad_to(delta, block_m, block_k)
     wp = _pad_to(w, block_k, block_n)
     pp = _pad_to(prev_out.astype(jnp.float32), block_m, block_n)
     gm, gk = dp.shape[0] // block_m, dp.shape[1] // block_k
     assert block_mask.shape == (gm, gk), (block_mask.shape, (gm, gk))
-    out = _reuse_matmul_kernel(
-        dp, wp, pp, block_mask,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        dataflow=dataflow, interpret=interpret, sel=sel,
-    )
+    if sub.use_pallas:
+        out = _reuse_matmul_kernel(
+            dp, wp, pp, block_mask,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            dataflow=dataflow, interpret=sub.interpret, sel=sel,
+        )
+    else:
+        out = _xla.reuse_matmul_xla(
+            dp, wp, pp, block_mask, block_m=block_m, block_k=block_k,
+        )
     return out[:m, :n]
 
 
@@ -109,16 +127,23 @@ def reuse_matmul_int8(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    sub = _backend.resolve(interpret)
     m, n = prev_acc.shape
     dp = _pad_to(delta_q, block_m, block_k)
     wp = _pad_to(w_q, block_k, block_n)
     pp = _pad_to(prev_acc, block_m, block_n)
-    out = _reuse_matmul_int8(
-        dp, wp, pp, block_mask,
-        block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret,
-    )
+    if sub.use_pallas:
+        out = _reuse_matmul_int8(
+            dp, wp, pp, block_mask,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=sub.interpret,
+        )
+    else:
+        out = _xla.reuse_matmul_int8_xla(
+            dp, wp, pp, block_mask, block_m=block_m, block_k=block_k,
+        )
     return out[:m, :n]
 
 
@@ -132,10 +157,10 @@ def reuse_matmul_ragged(
     block_n: int = 128,
     block_k: int = 256,
     max_active_k: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
     compacted: tuple[jax.Array, jax.Array] | None = None,  # (idx, counts)
 ) -> jax.Array:
-    """Padded entry to the ragged compacted-grid kernel.
+    """Padded entry to the ragged compacted-grid GEMM.
 
     `max_active_k` is the static k-extent budget (None = gk, i.e. no grid
     shrink but still compaction-ordered). When any row's live tile count
@@ -143,7 +168,10 @@ def reuse_matmul_ragged(
     the budget is a performance hint from the policy, never a correctness
     contract. `compacted` lets the caller thread a precomputed
     `compact_rows(block_mask)` (reuse_linear shares it with the accounting).
+    On the compiled-XLA substrate the compacted walk runs as the gather GEMM
+    (xla_tier.reuse_matmul_ragged_xla) with the same budget/fallback shape.
     """
+    sub = _backend.resolve(interpret)
     m, n = prev_out.shape
     dp = _pad_to(delta, block_m, block_k)
     wp = _pad_to(w, block_k, block_n)
@@ -157,10 +185,15 @@ def reuse_matmul_ragged(
     kb = clamp_budget(max_active_k, gk)
 
     def run(n_k: int) -> jax.Array:
-        return _reuse_matmul_ragged_kernel(
+        if sub.use_pallas:
+            return _reuse_matmul_ragged_kernel(
+                dp, wp, pp, counts, idx[:, :n_k],
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                interpret=sub.interpret,
+            )
+        return _xla.reuse_matmul_ragged_xla(
             dp, wp, pp, counts, idx[:, :n_k],
             block_m=block_m, block_n=block_n, block_k=block_k,
-            interpret=interpret,
         )
 
     if kb >= gk:
@@ -305,16 +338,23 @@ def delta_quant_fused(
     block_m: int = 128,
     block_k: int = 256,
     delta_dtype=jnp.bfloat16,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Padded entry to the fused delta/quant/mask kernel."""
+    """Padded entry to the fused delta/quant/mask pass."""
+    sub = _backend.resolve(interpret)
     m, k = x.shape
     xp = _pad_to(x, block_m, block_k)
     pq = _pad_to(prev_q, block_m, block_k)
-    q, delta, mask = delta_quant_kernel(
-        xp, pq, scale, block_m=block_m, block_k=block_k,
-        delta_dtype=delta_dtype, interpret=interpret,
-    )
+    if sub.use_pallas:
+        q, delta, mask = delta_quant_kernel(
+            xp, pq, scale, block_m=block_m, block_k=block_k,
+            delta_dtype=delta_dtype, interpret=sub.interpret,
+        )
+    else:
+        q, delta, mask = _xla.delta_quant_xla(
+            xp, pq, scale, block_m=block_m, block_k=block_k,
+            delta_dtype=delta_dtype,
+        )
     return q[:m, :k], delta[:m, :k], mask
 
 

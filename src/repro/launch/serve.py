@@ -22,7 +22,9 @@ TraceAnnotations line up host spans with device slices.
 from __future__ import annotations
 
 import argparse
+import functools
 import os
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -156,6 +158,9 @@ def main() -> None:
                   f"from {args.tuned_policy}")
         engine = build_reuse_engine(cfg, impl="jnp", policy=policy)
         rcache = engine.init_cache(args.batch_slots)
+        from repro.kernels import backend as kernel_backend
+
+        print(f"kernel substrate: {kernel_backend.describe()}")
         print(f"reuse cache: {cache_bytes(rcache)/1e6:.2f} MB "
               f"({len(engine.sites)} sites)")
         if args.cache_ckpt:
@@ -208,11 +213,31 @@ def main() -> None:
     def jit_prefill(p, toks, st):
         return prefill_step(p, cfg, toks, st)
 
+    # Jitted decode-step variants, keyed by the registered sites' full spec
+    # signature (exec paths, budgets, tile geometry — everything the closure
+    # bakes into the trace). A controller flip to a previously-seen operating
+    # point reuses its compiled executable instead of retracing from scratch;
+    # mode flips are ctrl-array writes and never change the key. The serving
+    # state and the reuse cache are DONATED through the step: the previous
+    # step's buffers are dead the moment the call is issued, so XLA writes
+    # the new caches in place instead of allocating a copy per token.
+    decode_variants: dict[tuple, Any] = {}
+
+    def spec_signature() -> tuple:
+        if engine is None:
+            return ()
+        return tuple(sorted(engine.sites.items()))
+
     def jit_decode_factory():
-        @jax.jit
-        def _step(p, toks, st, rc):
-            return decode_step(p, cfg, toks, st, engine=engine, reuse_cache=rc)
-        return _step
+        key = spec_signature()
+        fn = decode_variants.get(key)
+        if fn is None:
+            @functools.partial(jax.jit, donate_argnums=(2, 3))
+            def _step(p, toks, st, rc):
+                return decode_step(p, cfg, toks, st, engine=engine,
+                                   reuse_cache=rc)
+            decode_variants[key] = fn = _step
+        return fn
 
     decode_jit = jit_decode_factory()
 
@@ -228,11 +253,23 @@ def main() -> None:
 
         latency = None
         if args.latency_table:
-            from repro.obs.latency import load_latency_table
+            from repro.obs.latency import load_latency_table, table_provenance
 
             latency = load_latency_table(args.latency_table)
             print(f"controller pricing from measured latencies: "
                   f"{args.latency_table} ({len(latency)} rows)")
+            prov = table_provenance(latency)
+            if prov != "compiled":
+                print(f"WARNING: latency table {args.latency_table} carries "
+                      f"{prov} measurements — interpret-mode numbers run "
+                      "20-80x off compiled reality; re-probe with a compiled "
+                      "serve run (--obs-dir) before trusting its pricing")
+                if journal is not None:
+                    journal.note(
+                        note="latency_table_provenance",
+                        path=args.latency_table, provenance=prov,
+                        meta=latency.meta,
+                    )
         predictor = AdmissionPredictor()
         controller = Controller(
             ControlConfig(),

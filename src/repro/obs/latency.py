@@ -66,18 +66,26 @@ class LatencyStat:
 
 _Key = tuple[str, Any, str]  # (site, layer|None, exec_path)
 
+# Provenance fields stamped on every row (and the table meta): which substrate
+# produced the measurement. Compiled and interpret-mode numbers differ by
+# 20-80x on CPU — conflating them poisons every consumer downstream.
+TAG_FIELDS = ("backend", "interpret", "jax_version", "jaxlib_version")
+
 
 class LatencyTable:
     """Measured dispatch latency per (site, layer, exec_path)."""
 
     def __init__(self):
         self._samples: dict[_Key, list[float]] = {}
+        self._tags: dict[_Key, dict[str, Any]] = {}
         self.meta: dict[str, Any] = {}
 
     def record(self, site: str, layer: int | None, exec_path: str,
-               seconds: float) -> None:
-        self._samples.setdefault((site, layer, exec_path), []).append(
-            float(seconds))
+               seconds: float, *, tags: dict[str, Any] | None = None) -> None:
+        key = (site, layer, exec_path)
+        self._samples.setdefault(key, []).append(float(seconds))
+        if tags:
+            self._tags[key] = {k: tags[k] for k in TAG_FIELDS if k in tags}
 
     def stat(self, site: str, exec_path: str, *,
              layer: int | None = None) -> LatencyStat | None:
@@ -115,6 +123,7 @@ class LatencyTable:
             out.append({
                 "site": site, "layer": layer, "exec_path": path,
                 **dataclasses.asdict(stat),
+                **self._tags.get((site, layer, path), {}),
             })
         return out
 
@@ -165,7 +174,38 @@ def load_latency_table(path: str) -> LatencyTable:
         # collapse onto it (percentile detail lives in the saving process)
         key = (r["site"], r.get("layer"), r["exec_path"])
         table._samples[key] = [float(r["mean_s"])] * max(int(r["count"]), 1)
+        tags = {k: r[k] for k in TAG_FIELDS if k in r}
+        if tags:
+            table._tags[key] = tags
     return table
+
+
+def table_provenance(table: LatencyTable) -> str:
+    """Which substrate produced a table's measurements.
+
+    "compiled"  — every row (or the meta) says a compiled backend
+    "interpret" — every tagged row says interpret-mode Pallas
+    "mixed"     — both kinds of rows in one table
+    "unknown"   — no backend tags anywhere (a pre-backend-tag table)
+
+    `fit --latency-table` and `serve --latency-table` warn (and journal) on
+    anything but "compiled": interpret numbers price the policy against a
+    cost model 20-80x off compiled reality.
+    """
+    flags: set[bool] = set()
+    for key in table._samples:
+        tags = table._tags.get(key)
+        if tags is not None and "interpret" in tags:
+            flags.add(bool(tags["interpret"]))
+    if not flags and "interpret" in table.meta:
+        flags.add(bool(table.meta["interpret"]))
+    if not flags:
+        return "unknown"
+    if flags == {False}:
+        return "compiled"
+    if flags == {True}:
+        return "interpret"
+    return "mixed"
 
 
 def build_from_spans(span_rows: Iterable[dict[str, Any]]) -> LatencyTable:
@@ -177,11 +217,24 @@ def build_from_spans(span_rows: Iterable[dict[str, Any]]) -> LatencyTable:
         path = row.get("exec_path")
         if site is None or path is None:
             continue
-        table.record(site, row.get("layer"), path, row["dur_s"])
+        table.record(site, row.get("layer"), path, row["dur_s"], tags=row)
     return table
 
 
 # -------------------------------------------------------------- the prober
+
+def _path_tag(impl: str, path: str) -> dict[str, Any]:
+    """Substrate provenance for one probed path. The dense/compact/basic
+    paths are pure-jnp code on every impl (compiled XLA); kernel/ragged go
+    through the ops wrappers, whose substrate `kernels.backend` resolves
+    from the impl (compiled Pallas, compiled-XLA tier, or — only for
+    impl="pallas_interpret" — the explicit interpret test mode)."""
+    from repro.kernels import backend
+
+    if path in (BASIC_PATH, "dense", "compact"):
+        return backend.tag(backend.XLA)
+    return backend.tag(backend.for_impl(impl))
+
 
 def _viable_paths(spec, impl: str) -> list[str]:
     """Execution paths measurable for one site on one substrate: the masked
@@ -279,17 +332,21 @@ def probe_latency_table(
             n0 = len(trace.spans())
             for i in range(iters):
                 with trace.span("site_probe", site=name, layer=None,
-                                exec_path=path, skip_rate=skip) as sp:
+                                exec_path=path, skip_rate=skip,
+                                **_path_tag(engine.impl, path)) as sp:
                     out, cache = step(xs[i % 2], cache)
                     sp.sync(out)
             probe_spans.extend(trace.spans()[n0:])
 
     table = build_from_spans(probe_spans)
+    from repro.kernels import backend as _backend
+
     table.meta = {
         "source": "probe_latency_table",
         "impl": engine.impl,
         "batch": batch,
         "iters": iters,
+        **_backend.tag(_backend.for_impl(engine.impl)),
     }
     if not was_enabled:
         trace.disable()

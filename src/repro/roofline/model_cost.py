@@ -351,6 +351,123 @@ def _reuse_cache_traffic(cfg, mesh, b_loc) -> float:
     return cfg.n_layers * bytes_per_layer
 
 
+# ---------------------------------------------------------------------------
+# Kernel-level reuse-GEMM cost model
+#
+# The cell model above prices whole decode steps; the compiled skip-rate
+# sweep (benchmarks/wallclock.py --sweep) needs the same roofline discipline
+# ONE level down: for a single reuse site's [M,K]x[K,N] GEMM, how much work
+# does each execution substrate actually perform at a given tile-skip rate?
+# Time is modeled as balance-weighted work (flops + bytes x PEAK/BW) so the
+# prediction is a machine-independent RATIO; validate.validate_kernel_sweep
+# compares these ratios against the measured compiled sweep.
+# ---------------------------------------------------------------------------
+
+MACHINE_BALANCE = PEAK_FLOPS / HBM_BW  # flops per byte at the roofline knee
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCost:
+    """Work one reuse-GEMM substrate performs at a given skip rate."""
+
+    path: str
+    flops: float
+    bytes: float
+
+    @property
+    def work(self) -> float:
+        # time ∝ flops/PEAK + bytes/BW ∝ flops + bytes·BALANCE; ratios of
+        # `work` are the model's speedup predictions.
+        return self.flops + self.bytes * MACHINE_BALANCE
+
+
+def reuse_kernel_cost(
+    m: int, k: int, n: int, *, path: str, skip: float = 0.0,
+    block_m: int = 8, block_k: int = 128, max_active_k: int | None = None,
+) -> KernelCost:
+    """Flops + HBM bytes for one [M,K]x[K,N] reuse GEMM on `path`.
+
+    Paths mirror the compiled execution tiers:
+      dense / kernel / masked — full GEMM work (the masked XLA lowering and
+        the full-grid kernel walk every tile; masking saves no traffic on
+        the compiled-XLA tier).
+      compact — shared-K gather GEMM: only the union of active K-blocks is
+        gathered; gather MATERIALIZES the selected weight rows (read source
+        + write copy), which is exactly why compact loses below break-even.
+      ragged — per-M-group budgeted gather: the XLA lowering gathers a
+        weight copy PER GROUP (jnp.take over (gm, budget) indices), so its
+        weight traffic is gm x budget blocks — the price of per-row raggedness
+        on a substrate without scalar-prefetch grids.
+    """
+    gk = -(-k // block_k)
+    gm = -(-m // block_m)
+    el = F32
+    dense_flops = 2.0 * m * k * n
+    dense_bytes = el * (m * k + k * n + 2.0 * m * n)
+    if path in ("dense", "dense_gemm", "kernel", "masked", "masked_ref", "ref"):
+        return KernelCost(path=path, flops=dense_flops, bytes=dense_bytes)
+    occ = min(max(1.0 - skip, 0.0), 1.0)
+    if path == "compact":
+        ak = occ * gk * block_k  # union of active K-blocks (shared mask)
+        flops = 2.0 * m * ak * n
+        bytes_ = el * (
+            2.0 * ak * n        # gather W rows: read source + materialize
+            + 2.0 * m * ak      # gather delta columns: read + materialize
+            + 2.0 * m * n       # prev_out read + out write
+        )
+        return KernelCost(path=path, flops=flops, bytes=bytes_)
+    if path in ("ragged", "ragged_xla"):
+        if max_active_k is None:
+            kb = max(int(math.ceil(occ * gk)), 1)  # budget sized to occupancy
+        else:
+            kb = int(max_active_k)
+        kb = min(max(kb, 1), gk)
+        ak = kb * block_k
+        flops = 2.0 * m * ak * n  # einsum runs the full budget, masked
+        bytes_ = el * (
+            2.0 * gm * ak * n   # per-group weight gather: read + materialize
+            + 2.0 * m * ak      # per-group delta gather
+            + 2.0 * m * n
+        )
+        return KernelCost(path=path, flops=flops, bytes=bytes_)
+    raise ValueError(f"unknown kernel path {path!r}")
+
+
+def predict_kernel_speedup(
+    m: int, k: int, n: int, *, path: str, skip: float,
+    block_m: int = 8, block_k: int = 128, max_active_k: int | None = None,
+) -> float:
+    """Predicted dense_time / path_time ratio (>1 means the path wins)."""
+    dense = reuse_kernel_cost(m, k, n, path="dense", block_m=block_m,
+                              block_k=block_k)
+    pc = reuse_kernel_cost(m, k, n, path=path, skip=skip, block_m=block_m,
+                           block_k=block_k, max_active_k=max_active_k)
+    return dense.work / max(pc.work, 1e-12)
+
+
+def predicted_break_even_skip(
+    m: int, k: int, n: int, *, path: str = "compact",
+    block_m: int = 8, block_k: int = 128, samples: int = 101,
+) -> float:
+    """Lowest skip rate where `path` matches dense under the work model.
+
+    Same convention as tune.harvest.derive_break_even_skip: 2.0 = the path
+    never wins on this shape (gate should demote to dense)."""
+    prev_s, prev_m = None, None
+    for i in range(samples):
+        s = i / (samples - 1)
+        margin = predict_kernel_speedup(
+            m, k, n, path=path, skip=s, block_m=block_m, block_k=block_k,
+        ) - 1.0
+        if margin >= 0.0:
+            if prev_s is None or margin == prev_m:
+                return s
+            t = -prev_m / (margin - prev_m)
+            return prev_s + t * (s - prev_s)
+        prev_s, prev_m = s, margin
+    return 2.0
+
+
 def model_flops_per_step(cfg: ModelConfig, cell: ShapeCell) -> float:
     """MODEL_FLOPS: 6·N·D (dense train) / 6·N_active·D (MoE train); 2·N·D per
     generated/processed token for inference. GLOBAL (all devices)."""

@@ -147,11 +147,17 @@ def main() -> None:
 
     latency = None
     if args.latency_table:
-        from repro.obs.latency import load_latency_table
+        from repro.obs.latency import load_latency_table, table_provenance
 
         latency = load_latency_table(args.latency_table)
         print(f"pricing from measured latencies: {args.latency_table} "
               f"({len(latency)} rows)")
+        prov = table_provenance(latency)
+        if prov != "compiled":
+            print(f"WARNING: latency table {args.latency_table} carries "
+                  f"{prov} measurements — interpret-mode numbers price the "
+                  "fit 20-80x off compiled reality; re-probe with a compiled "
+                  "serve run (--obs-dir) before trusting the fitted table")
     cfg = FitConfig(safety_margin=args.safety_margin,
                     prior_efficiency=args.prior_efficiency,
                     pallas_target=args.pallas_target,

@@ -265,6 +265,35 @@ def solve_site(rec: SiteTraceRecord, cfg: FitConfig = FitConfig()) -> SiteTunabl
     )
 
 
+def derive_break_even_skip(points) -> float:
+    """Measured break-even skip rate from a compiled skip-rate sweep.
+
+    `points` is a sequence of (skip_rate, best_reuse_seconds, dense_seconds)
+    triples — one per measured skip rate (the compiled sweep
+    `benchmarks/wallclock.py` appends to the BENCH trajectory emits them).
+    Returns the skip rate where the best reuse path first matches the dense
+    GEMM, linearly interpolating the crossing between the last losing and
+    first winning sweep points. When reuse never wins, returns 2.0 — an
+    unreachable gate, so `ReusePolicy(ragged_break_even_skip=...)` demotes
+    every site to the masked/dense walk (the honest outcome the acceptance
+    criteria allow the sweep to record).
+    """
+    pts = sorted((float(s), float(r), float(d)) for s, r, d in points)
+    if not pts:
+        return RAGGED_BREAK_EVEN_SKIP
+    margins = [(s, d - r) for s, r, d in pts]  # > 0 = reuse wins
+    for i, (s, m) in enumerate(margins):
+        if m >= 0.0:
+            if i == 0:
+                return s
+            s0, m0 = margins[i - 1]
+            if m == m0:
+                return s
+            t = -m0 / (m - m0)  # m0 < 0 <= m: crossing fraction in (0, 1]
+            return s0 + t * (s - s0)
+    return 2.0
+
+
 def record_from_sensor(s, *, mode: str | None = None) -> SiteTraceRecord:
     """A solver-ready record from an in-memory SiteSensor — the JSONL-free
     equivalent of parsing the row `SensorReport.write_jsonl` would emit for
