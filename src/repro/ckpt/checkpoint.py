@@ -3,14 +3,25 @@
 Layout (one directory per step):
 
     <dir>/step_000420/
-        manifest.json       — tree structure, shapes, dtypes, host shard map
-        host_00000.npz      — this host's param/opt shards (flattened leaves)
+        manifest.json           — tree structure, shapes, dtypes, host shard
+                                  map, per-file sha256 (host-0 files)
+        host_00000.npz          — this host's param/opt shards (flat leaves)
+        host_00000.npz.sha256   — content hash sidecar (every host writes its
+                                  own — host 0 can't know remote hashes when
+                                  it writes the manifest)
     <dir>/step_000420.COMPLETE   — commit marker (atomic rename)
 
 Design points for 1000+ node deployments:
   * each host writes only its local shards (no cross-host gather);
   * the COMPLETE marker is written only after every host's file exists, so a
     preempted save can never be restored from (torn-write safety);
+  * a COMPLETE marker proves the save FINISHED, not that the bytes are still
+    good — bitrot, torn page writes behind the marker, or a half-synced
+    object-store copy all pass the marker check. `restore_checkpoint`
+    therefore verifies each host file against its recorded sha256 and raises
+    :class:`CorruptCheckpointError`; `latest_valid_step` walks markers
+    newest-first past corrupt/missing steps to the newest restorable one
+    (hash verification only — no array loading);
   * `restore` reshards from the manifest — the restoring mesh may have a
     different host count or layout (elastic restart after losing a pod);
   * `AsyncCheckpointer` runs saves on a writer thread so the train loop only
@@ -22,6 +33,7 @@ are exercised by writing/reading synthetic multi-host manifests in tests.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -33,6 +45,19 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint's bytes don't match their recorded sha256 (or the payload
+    is unreadable) even though its COMPLETE marker exists."""
+
+
+def _sha256_file(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree: Any):
@@ -76,12 +101,19 @@ def save_checkpoint(
         arrays[key] = arr
         manifest_leaves[key] = {"shape": list(leaf.shape), "dtype": dtype_tag}
 
-    np.savez(tmp_dir / f"host_{host_id:05d}.npz", **arrays)
+    host_file = tmp_dir / f"host_{host_id:05d}.npz"
+    np.savez(host_file, **arrays)
+    digest = _sha256_file(host_file)
+    # every host writes its own sidecar; host 0 additionally records ITS
+    # file's hash in the manifest (it cannot know remote hosts' hashes at
+    # manifest-write time — verification falls back to sidecars for those)
+    (tmp_dir / f"{host_file.name}.sha256").write_text(digest + "\n")
     if host_id == 0:
         (tmp_dir / "manifest.json").write_text(json.dumps({
             "step": step,
             "n_hosts": n_hosts,
             "leaves": manifest_leaves,
+            "files": {host_file.name: digest},
             "time": time.time(),
         }, indent=1))
 
@@ -108,6 +140,69 @@ def latest_step(directory: str | Path) -> int | None:
     return max(steps) if steps else None
 
 
+def verify_checkpoint(directory: str | Path, step: int) -> None:
+    """Integrity-check one checkpoint's bytes without loading any arrays.
+
+    Every host file must exist and match its recorded sha256 — the manifest's
+    `files` entry when present (host 0), else the host's own `.sha256`
+    sidecar. Raises :class:`CorruptCheckpointError` naming the first bad
+    file; pre-integrity checkpoints (no hashes anywhere) pass unverified,
+    matching their era's guarantees."""
+    step_dir = Path(directory) / f"step_{step:06d}"
+    manifest_path = step_dir / "manifest.json"
+    try:
+        manifest = json.loads(manifest_path.read_text())
+    except FileNotFoundError:
+        raise CorruptCheckpointError(
+            f"{step_dir}: manifest.json missing behind a COMPLETE marker")
+    except (json.JSONDecodeError, OSError) as e:
+        raise CorruptCheckpointError(
+            f"{manifest_path}: unreadable manifest: {e}") from e
+    hashes = manifest.get("files", {})
+    for h in range(int(manifest.get("n_hosts", 1))):
+        name = f"host_{h:05d}.npz"
+        host_file = step_dir / name
+        if not host_file.exists():
+            raise CorruptCheckpointError(
+                f"{host_file}: host file missing behind a COMPLETE marker")
+        want = hashes.get(name)
+        if want is None:
+            sidecar = step_dir / f"{name}.sha256"
+            if not sidecar.exists():
+                continue  # pre-integrity checkpoint: nothing to check against
+            want = sidecar.read_text().strip()
+        got = _sha256_file(host_file)
+        if got != want:
+            raise CorruptCheckpointError(
+                f"{host_file}: sha256 mismatch (stored {want[:12]}…, "
+                f"actual {got[:12]}…) — bytes changed after the save "
+                f"committed")
+
+
+def latest_valid_step(directory: str | Path) -> int | None:
+    """Newest step that passes integrity verification.
+
+    Walks COMPLETE markers newest-first and skips any step whose payload is
+    corrupt or missing — the recovery path after bitrot or a partially-synced
+    restore source, where `latest_step` would hand the loop a checkpoint that
+    explodes on restore. Verification is hash-only (no array loading)."""
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(
+        (int(p.name.split("_")[1].split(".")[0])
+         for p in directory.glob("step_*.COMPLETE")),
+        reverse=True,
+    )
+    for step in steps:
+        try:
+            verify_checkpoint(directory, step)
+        except CorruptCheckpointError:
+            continue
+        return step
+    return None
+
+
 def restore_checkpoint(
     directory: str | Path,
     step: int,
@@ -116,16 +211,27 @@ def restore_checkpoint(
     shardings: Any | None = None,
 ) -> Any:
     """Elastic restore: loads all host files, reassembles leaves, and places
-    them with `shardings` (which may target a different mesh than the save)."""
+    them with `shardings` (which may target a different mesh than the save).
+
+    Integrity is verified BEFORE any array is materialized: a hash mismatch,
+    missing host file, or unreadable payload raises
+    :class:`CorruptCheckpointError` — callers fall back to an older step via
+    `latest_valid_step` instead of restoring silently-wrong weights."""
     directory = Path(directory)
+    verify_checkpoint(directory, step)
     step_dir = directory / f"step_{step:06d}"
     manifest = json.loads((step_dir / "manifest.json").read_text())
 
     merged: dict[str, np.ndarray] = {}
     for host_file in sorted(step_dir.glob("host_*.npz")):
-        with np.load(host_file) as z:
-            for key in z.files:
-                merged[key] = z[key]
+        try:
+            with np.load(host_file) as z:
+                for key in z.files:
+                    merged[key] = z[key]
+        except Exception as e:  # zip/pickle-layer damage the hash check
+            # can't see on pre-integrity checkpoints without sidecars
+            raise CorruptCheckpointError(
+                f"{host_file}: unreadable payload: {e}") from e
 
     keys, struct_leaves, treedef = _flatten_with_paths(state_struct)
     out_leaves = []

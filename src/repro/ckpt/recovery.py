@@ -6,26 +6,29 @@
   * SIGTERM/preemption hook → synchronous final checkpoint before exit
     (cloud TPU preemption semantics);
   * bounded retry on transient step failure (collective timeout, device
-    error): re-restore from the last complete checkpoint and replay — the
-    deterministic data pipeline (data/pipeline.py) makes replay exact;
-  * straggler watchdog: per-step wall time EMA; a step slower than
-    `straggler_factor`× the median is logged with a re-shard recommendation.
-    On real fleets this feeds the controller that evicts the slow host; here
-    it is exercised by fault-injection tests.
+    error): re-restore from the last complete VERIFIED checkpoint and replay
+    — `latest_valid_step` hash-checks payloads so a corrupt checkpoint
+    behind a COMPLETE marker is walked past, and the deterministic data
+    pipeline (data/pipeline.py) makes replay exact;
+  * straggler watchdog (`repro.guard.watchdog.StragglerWatchdog`, shared with
+    the serving plane's quarantine breaker): a step slower than
+    `straggler_factor`× the window median is logged with a re-shard
+    recommendation. On real fleets this feeds the controller that evicts the
+    slow host; here it is exercised by fault-injection tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import signal
-import statistics
 from typing import Any, Callable
 
 from repro.ckpt.checkpoint import (
     AsyncCheckpointer,
-    latest_step,
+    latest_valid_step,
     restore_checkpoint,
 )
+from repro.guard.watchdog import StragglerWatchdog
 from repro.obs import trace as obs_trace
 
 
@@ -50,15 +53,25 @@ class ResilientLoop:
         self.batch_fn = batch_fn
         self.cfg = cfg
         self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
-        self.step_times: list[float] = []
-        self.straggler_events: list[dict] = []
+        self.watchdog = StragglerWatchdog(
+            factor=cfg.straggler_factor, window=cfg.straggler_window)
         self._preempted = False
+
+    # The watchdog owns the raw data; these aliases preserve the loop's
+    # historical reporting surface.
+    @property
+    def step_times(self) -> list[float]:
+        return self.watchdog.step_times
+
+    @property
+    def straggler_events(self) -> list[dict]:
+        return self.watchdog.events
 
     def _handle_preemption(self, signum, frame):
         self._preempted = True
 
     def resume_or_init(self, init_state_fn, *, shardings=None):
-        last = latest_step(self.cfg.ckpt_dir)
+        last = latest_valid_step(self.cfg.ckpt_dir)
         if last is not None:
             struct = init_state_fn()  # cheap on CPU smoke scale; eval_shape OK too
             state = restore_checkpoint(
@@ -66,17 +79,6 @@ class ResilientLoop:
             )
             return state, last + 1
         return init_state_fn(), 0
-
-    def _watch_straggler(self, step: int, dt: float) -> None:
-        self.step_times.append(dt)
-        window = self.step_times[-self.cfg.straggler_window:]
-        if len(window) >= 8:
-            med = statistics.median(window)
-            if dt > self.cfg.straggler_factor * med:
-                self.straggler_events.append({
-                    "step": step, "seconds": dt, "median": med,
-                    "action": "recommend re-shard / evict host",
-                })
 
     def run(
         self,
@@ -104,7 +106,7 @@ class ResilientLoop:
                     if retries > self.cfg.max_retries:
                         self.ckpt.wait()
                         raise
-                    last = latest_step(self.cfg.ckpt_dir)
+                    last = latest_valid_step(self.cfg.ckpt_dir)
                     if last is not None:
                         self.ckpt.wait()
                         state = restore_checkpoint(
@@ -113,7 +115,7 @@ class ResilientLoop:
                         step = last + 1
                     continue
 
-                self._watch_straggler(step, obs_trace.now() - t0)
+                self.watchdog.observe(step, obs_trace.now() - t0)
                 if on_metrics is not None:
                     on_metrics(step, metrics)
                 if step % self.cfg.ckpt_every == 0 or self._preempted:

@@ -50,6 +50,7 @@ class AdmissionPredictor:
         self.slot_session: dict[int, Any] = {}
         self.lane_character: dict[int, float] = {}
         self.observations = 0
+        self.rejected_observations = 0  # forged/non-finite telemetry dropped
 
     # ------------------------------------------------------------- prediction
     def predict(self, req: Any) -> float:
@@ -74,11 +75,26 @@ class AdmissionPredictor:
 
         Attribution goes through the slot binding when one exists, so
         telemetry can never be credited to a session that already left the
-        slot (reset_slot clears the binding on recycle)."""
+        slot (reset_slot clears the binding on recycle).
+
+        Telemetry is UNTRUSTED input (it crosses the scheduler boundary and
+        the guard plane's lying-telemetry scenario forges it): non-finite
+        hit rates are dropped entirely — one NaN folded into the EMAs would
+        poison every future prediction irreversibly — and finite values are
+        clamped to the [0, 1] range a hit rate can actually take. The slot
+        binding is still consumed on a dropped observation, so forged
+        telemetry can't leave a stale attribution behind."""
+        import math
+
         t = req.telemetry or {}
         if int(t.get("steps", 0)) <= 0:
             return
         hit = float(t.get("hit_rate", 0.0))
+        if not math.isfinite(hit):
+            self.slot_session.pop(req.slot, None)
+            self.rejected_observations += 1
+            return
+        hit = min(max(hit, 0.0), 1.0)
         key = self.slot_session.pop(req.slot, _session_key(req))
         prev = self.sessions.pop(key, self.global_est)
         while len(self.sessions) >= self.max_sessions:
@@ -102,4 +118,5 @@ class AdmissionPredictor:
             "global_est": self.global_est,
             "n_sessions": len(self.sessions),
             "observations": self.observations,
+            "rejected_observations": self.rejected_observations,
         }

@@ -111,9 +111,16 @@ class Controller:
         admission: AdmissionPredictor | None = None,
         journal: DecisionJournal | None = None,
         latency=None,
+        guard=None,
     ):
         self.config = config
         self.admission = admission
+        # Optional repro.guard.QuarantineBreaker: runs FIRST each interval
+        # (containment before adaptation — retuning a poisoned window would
+        # learn from garbage), its decisions merge into the one journal
+        # stream, and sites it froze are skipped by the retuner this interval.
+        self.guard = guard
+        self.last_guard_report = None
         if journal is None and config.journal_path:
             journal = DecisionJournal(config.journal_path)
         self.journal = journal
@@ -152,9 +159,27 @@ class Controller:
             cfg.fit.latency,
         )
 
+        # -- loop 0: fault containment BEFORE adaptation. The breaker reads
+        # the sentinel lanes riding the same ctrl snapshot, pins tripped
+        # lanes to basic, scrubs poisoned state, and journals the
+        # transitions; retuning a site it froze this interval would fit the
+        # harvest model to a poisoned window, so those sites sit out.
+        frozen: set[str] = set()
+        self.last_guard_report = None
+        if self.guard is not None:
+            guard_report = self.guard.step(engine, cache, step=step)
+            self.last_guard_report = guard_report
+            decisions.extend(guard_report.decisions)
+            frozen = guard_report.frozen_sites
+
         for name, spec in list(engine.sites.items()):
             cur = snapshot_entry(cache[name])
             if cur is None:
+                continue
+            if name in frozen:
+                # reset the window baseline: the pre-containment half of the
+                # window measured a poisoned site
+                self._snaps[name] = cur
                 continue
             prev = self._snaps.get(name)
             if prev is None:
@@ -322,7 +347,13 @@ class Controller:
         # Mode flips are per-layer ctrl-array writes (journaled from the
         # engine's event list, NO retrace); only exec-path flips — spec
         # changes — come back in the refresh result and force a rebuild.
-        if windows:
+        # The refresh also rides every interval where the guard is watching a
+        # non-active lane: recovery from quarantine (cooldown drain, mode
+        # re-promotion) must not wait for the retuner to accumulate a
+        # min-samples window.
+        guard_watch = self.guard is not None and any(
+            st != "active" for st in self.guard.lane_states().values())
+        if windows or guard_watch:
             paths_before = {n: s.exec_path for n, s in engine.sites.items()}
             for name, what in engine.refresh_modes(cache).items():
                 retrace[name] = what

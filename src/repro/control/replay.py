@@ -152,6 +152,13 @@ def apply_to_engine(rows: list[dict[str, Any]], engine, cache) -> dict[str, Any]
             engine.sites[site] = dataclasses.replace(
                 spec, exec_path=after, max_active_k=budget,
             )
+        elif kind == "quarantine" and field == "state":
+            # containment transitions: entering quarantine pins the lane to
+            # basic (the breaker's ctrl write); leaving it does NOT force
+            # reuse — the hysteretic refresh re-promotes from recovered
+            # sim_ema, so replay only reproduces the pin.
+            if after == "quarantined":
+                engine.set_mode(cache, site, "basic", layer=layer)
     out: dict[str, Any] = {}
     for name, spec in engine.sites.items():
         out[name] = dict(

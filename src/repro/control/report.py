@@ -23,8 +23,14 @@ from typing import Any
 #       active (run/window/...; absent = pre-obs emission, byte-identical to
 #       v2), and the "restore" decision kind records checkpoint-vs-tuned-table
 #       precedence resolutions at startup
-CONTROL_JOURNAL_SCHEMA_VERSION = 3
-LOADABLE_JOURNAL_VERSIONS = (1, 2, 3)
+#   4 — the "quarantine" decision kind records guard-plane containment
+#       transitions (field="state": active→quarantined→probation→active, with
+#       the tripped-sentinel evidence in `reason`; field="stall_windows":
+#       straggler-watchdog events, site=""), and `load_journal` tolerates
+#       exactly one torn final row (crash mid-append) by emitting a
+#       kind="torn_tail" marker instead of raising
+CONTROL_JOURNAL_SCHEMA_VERSION = 4
+LOADABLE_JOURNAL_VERSIONS = (1, 2, 3, 4)
 
 # Decision kinds: which feedback loop acted.
 #   "retune"  — online refit of a SiteTunables knob from windowed counters
@@ -36,7 +42,12 @@ LOADABLE_JOURNAL_VERSIONS = (1, 2, 3)
 #   "admit"   — admission-predictor population estimate moved
 #   "restore" — startup precedence resolution between a checkpointed ctrl
 #               block and the tuned-policy table (checkpoint < table < live)
-DECISION_KINDS = ("retune", "budget", "mode", "exec", "admit", "restore")
+#   "quarantine" — guard-plane containment: a tripped sentinel pinned a lane
+#               to basic/dense, a lockout drained into probation, or a lane
+#               re-admitted after clean windows (field="state"); straggler
+#               stalls journal as field="stall_windows" with site=""
+DECISION_KINDS = (
+    "retune", "budget", "mode", "exec", "admit", "restore", "quarantine")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,10 +134,16 @@ class DecisionJournal:
         self.rows_written = 0
 
     def append(self, report: ControlReport) -> None:
+        # crash consistency: serialize the whole interval first, then ONE
+        # write + flush. A crash can tear at most the final OS-level write —
+        # never interleave half an interval with the next process's rows —
+        # and load_journal tolerates exactly that one torn tail.
+        rows = report.to_dicts()
+        payload = "".join(json.dumps(row) + "\n" for row in rows)
         with open(self.path, "a") as f:
-            for row in report.to_dicts():
-                f.write(json.dumps(row) + "\n")
-                self.rows_written += 1
+            f.write(payload)
+            f.flush()
+        self.rows_written += len(rows)
 
     def note(self, **fields: Any) -> None:
         """Append one kind="note" row outside any ControlReport: operational
@@ -142,7 +159,8 @@ class DecisionJournal:
         ))
         with open(self.path, "a") as f:
             f.write(json.dumps(row) + "\n")
-            self.rows_written += 1
+            f.flush()
+        self.rows_written += 1
 
 
 def load_journal(path: str) -> list[dict[str, Any]]:
@@ -151,20 +169,40 @@ def load_journal(path: str) -> list[dict[str, Any]]:
     Loads every journal version this repo has ever emitted
     (`LOADABLE_JOURNAL_VERSIONS`): v1 rows gain `layer=None`, v1/v2 rows
     simply lack the v3 `trace` id sub-dict — consumers treat both as
-    optional. Unknown FUTURE versions are rejected loudly."""
-    rows = []
+    optional. Unknown FUTURE versions are rejected loudly.
+
+    Crash tolerance (v4): `DecisionJournal.append` writes whole intervals in
+    one flushed write, so the only tear a crash can produce is a truncated
+    FINAL line. Exactly that is forgiven — the bad tail is replaced by a
+    ``{"kind": "torn_tail", "lineno": ..., "prefix": ...}`` marker row
+    (replay-inert: replay only chains kind="decision" rows) so the audit
+    stream records that the run died mid-append. Unparseable rows anywhere
+    BEFORE the tail are still real corruption and raise."""
     with open(path) as f:
-        for lineno, line in enumerate(f, start=1):
-            line = line.strip()
-            if not line:
-                continue
+        lines = f.readlines()
+    numbered = [(i, ln.strip()) for i, ln in enumerate(lines, start=1)
+                if ln.strip()]
+    rows: list[dict[str, Any]] = []
+    for pos, (lineno, line) in enumerate(numbered):
+        try:
             row = json.loads(line)
-            ver = row.get("schema_version")
-            if ver not in LOADABLE_JOURNAL_VERSIONS:
-                raise ValueError(
-                    f"{path}:{lineno}: journal schema_version {ver!r} not in "
-                    f"{LOADABLE_JOURNAL_VERSIONS}")
-            if "layer" not in row and row.get("kind") == "decision":
-                row["layer"] = None  # v1 decisions predate per-layer lanes
-            rows.append(row)
+        except json.JSONDecodeError as e:
+            if pos == len(numbered) - 1:
+                rows.append({
+                    "kind": "torn_tail", "lineno": lineno,
+                    "prefix": line[:80],
+                    "schema_version": CONTROL_JOURNAL_SCHEMA_VERSION,
+                })
+                return rows
+            raise ValueError(
+                f"{path}:{lineno}: unparseable journal row before the tail "
+                f"(mid-file corruption, not a torn append): {e}") from e
+        ver = row.get("schema_version")
+        if ver not in LOADABLE_JOURNAL_VERSIONS:
+            raise ValueError(
+                f"{path}:{lineno}: journal schema_version {ver!r} not in "
+                f"{LOADABLE_JOURNAL_VERSIONS}")
+        if "layer" not in row and row.get("kind") == "decision":
+            row["layer"] = None  # v1 decisions predate per-layer lanes
+        rows.append(row)
     return rows

@@ -62,7 +62,13 @@ def _ctrl_snapshot_device(cache: dict[str, Any]) -> dict[str, Any]:
     the sensor tile sums. Before this existed, refresh_modes/refresh_exec_
     paths issued ~7 device→host syncs PER SITE per control interval; now the
     reductions run in one compiled executable and the host pulls one tiny
-    pytree (see ReuseEngine.ctrl_snapshot)."""
+    pytree (see ReuseEngine.ctrl_snapshot).
+
+    The guard plane's array sentinels (non-finite flags, ctrl-lane range
+    bitmasks, per-layer counter lanes — repro.guard.sentinel) ride the same
+    traced pass, so fault DETECTION costs zero extra device→host syncs."""
+    from repro.guard.sentinel import sentinel_lanes
+
     snap: dict[str, Any] = {}
     for name, entry in cache.items():
         s: dict[str, jax.Array] = {}
@@ -79,6 +85,8 @@ def _ctrl_snapshot_device(cache: dict[str, Any]) -> dict[str, Any]:
         if sensor is not None:
             s["skipped"] = jnp.sum(sensor["skipped_tiles"])
             s["computed"] = jnp.sum(sensor["computed_tiles"])
+        if ctrl is not None:
+            s.update(sentinel_lanes(entry))
         snap[name] = s
     return snap
 
@@ -370,8 +378,10 @@ class ReuseEngine:
             ]
             margin = np.asarray([t.hysteresis_margin for t in ts])
             hyst = np.asarray([t.hysteresis_steps for t in ts])
+            quar = s.get("quarantine")
             want = self.policy.decide_modes(
-                spec, sim_l, mode_id, thr, mw, hysteresis_margin=margin
+                spec, sim_l, mode_id, thr, mw, hysteresis_margin=margin,
+                quarantine=None if quar is None else np.asarray(quar),
             )
             flip = want != mode_id
             vetoed = flip & (cd > 0)

@@ -206,6 +206,7 @@ class ReusePolicy:
         min_work: np.ndarray,       # [L] live min-work floors (ctrl block)
         *,
         hysteresis_margin: np.ndarray,  # [L]
+        quarantine: np.ndarray | None = None,  # [L] guard lockout intervals
     ) -> np.ndarray:
         """Vectorized decide_mode over the layer axis of one site.
 
@@ -213,20 +214,26 @@ class ReusePolicy:
         reuse mode iff its work clears its min_work floor AND its sim_ema
         clears its threshold — hysteretically, the signal must leave the
         current mode's band by the margin. Returns the WANTED mode ids [L];
-        the engine's refresh owns cooldown vetoes and the actual write."""
+        the engine's refresh owns cooldown vetoes and the actual write.
+
+        A lane with `quarantine > 0` (the guard plane's circuit breaker
+        tripped a sentinel on it) is pinned to MODE_BASIC unconditionally —
+        fault containment beats even an explicitly spec-pinned "reuse"."""
         if spec.mode in ("reuse", "basic"):  # explicit kernelMode wins
             pinned = MODE_REUSE if spec.mode == "reuse" else MODE_BASIC
-            return np.full_like(np.asarray(mode_id), pinned)
-        work = 2.0 * spec.in_features * spec.out_features
-        thr = np.where(
-            mode_id > 0,
-            sim_threshold - hysteresis_margin,
-            sim_threshold + hysteresis_margin,
-        )
-        want = np.where(sim_ema >= thr, MODE_REUSE, MODE_BASIC)
-        return np.where(work < min_work, MODE_BASIC, want).astype(
-            np.asarray(mode_id).dtype
-        )
+            want = np.full_like(np.asarray(mode_id), pinned)
+        else:
+            work = 2.0 * spec.in_features * spec.out_features
+            thr = np.where(
+                mode_id > 0,
+                sim_threshold - hysteresis_margin,
+                sim_threshold + hysteresis_margin,
+            )
+            want = np.where(sim_ema >= thr, MODE_REUSE, MODE_BASIC)
+            want = np.where(work < min_work, MODE_BASIC, want)
+        if quarantine is not None:
+            want = np.where(np.asarray(quarantine) > 0, MODE_BASIC, want)
+        return np.asarray(want).astype(np.asarray(mode_id).dtype)
 
     def resolve_block_k(self, site: str, default: int) -> int:
         bk = self.resolve(site).block_k

@@ -96,6 +96,12 @@ def init_site_ctrl(spec: ReuseSiteSpec, tunables=None) -> dict[str, jax.Array]:
         occupancy     : f32    — EMA of the live (computed) tile fraction per
                                  evaluation — the per-layer budget-occupancy
                                  signal the budget adapter consults
+        quarantine    : int32  — guard-plane lockout intervals left for this
+                                 layer (repro.guard): while > 0 the mode
+                                 decide pins the lane to basic/dense, beating
+                                 even a spec-pinned "reuse". Written by the
+                                 quarantine breaker on a tripped sentinel,
+                                 drained by the breaker's own pass.
 
     Start optimistic (the paper's default is reuse-on) unless the spec pins
     kernelMode explicitly; the policy may demote per layer.
@@ -117,6 +123,7 @@ def init_site_ctrl(spec: ReuseSiteSpec, tunables=None) -> dict[str, jax.Array]:
         "min_work": jnp.asarray(mw, dtype=jnp.float32),
         "cooldown": jnp.zeros((), dtype=jnp.int32),
         "occupancy": jnp.ones((), dtype=jnp.float32),
+        "quarantine": jnp.zeros((), dtype=jnp.int32),
     }
 
 

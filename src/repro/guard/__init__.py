@@ -1,0 +1,41 @@
+"""repro.guard — serving-plane fault containment.
+
+ReuseSense's bet is that STALE STATE (cached products of a previous input)
+can stand in for fresh computation, which makes the serving loop uniquely
+exposed to state corruption: one poisoned prev_q/prev_out slot or a garbage
+ctrl lane silently wrongs every output until the slot recycles. This package
+is the containment plane:
+
+* :mod:`repro.guard.inject`     — deterministic, seeded fault injector with
+  hooks at the real seams (cache post-update, ctrl block, retirement
+  telemetry, journal writer, checkpoint dir, step clock). Each fault is a
+  named scenario usable from tests and ``serve --inject <scenario>``.
+* :mod:`repro.guard.sentinel`   — cheap invariant checks that ride the jitted
+  control snapshot as array ops (non-finite flags, ctrl-lane range
+  validation, counter conservation) plus a periodic dense shadow spot-check
+  against the bitwise oracle.
+* :mod:`repro.guard.quarantine` — the per-(site, layer) circuit breaker:
+  tripped sentinel → lane pinned to basic/dense via a ctrl array write (no
+  retrace), poisoned state scrubbed, replayable ``kind="quarantine"``
+  journal decision; probation with exponential backoff re-admits.
+* :mod:`repro.guard.watchdog`   — the median-based straggler watchdog shared
+  by the training loop (`ckpt.recovery.ResilientLoop`) and the serve step
+  clock, feeding the same breaker.
+"""
+
+from repro.guard.inject import SCENARIOS, FaultInjector
+from repro.guard.quarantine import GuardConfig, GuardReport, QuarantineBreaker
+from repro.guard.sentinel import evaluate_snapshot, sentinel_lanes, shadow_check
+from repro.guard.watchdog import StragglerWatchdog
+
+__all__ = [
+    "SCENARIOS",
+    "FaultInjector",
+    "GuardConfig",
+    "GuardReport",
+    "QuarantineBreaker",
+    "StragglerWatchdog",
+    "evaluate_snapshot",
+    "sentinel_lanes",
+    "shadow_check",
+]

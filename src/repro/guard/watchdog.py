@@ -1,0 +1,54 @@
+"""Straggler watchdog — median-based step-latency anomaly detection.
+
+One implementation shared by the two loops that need it: the training
+harness (`repro.ckpt.recovery.ResilientLoop`, which historically carried this
+logic inline) and the serving step clock (`repro.launch.serve` times each
+decode step and feeds the guard plane's circuit breaker). A step slower than
+`factor`× the median of the recent window is an event; on real fleets this
+feeds the controller that evicts the slow host, here it feeds the quarantine
+breaker's stall accounting (a stalled interval never counts as "clean" for
+probation) and the ResilientLoop's re-shard recommendation.
+
+Median, not EMA, on purpose: one straggler must not drag the baseline it is
+judged against (an EMA poisoned by the outlier stops flagging the next one).
+"""
+
+from __future__ import annotations
+
+import statistics
+
+
+class StragglerWatchdog:
+    """Per-step wall-time monitor. `observe(step, dt)` returns an event dict
+    when the step breached `factor`× the window median, else None. All events
+    accumulate in `.events` for end-of-run reporting."""
+
+    def __init__(
+        self,
+        *,
+        factor: float = 2.0,
+        window: int = 32,
+        min_samples: int = 8,
+        action: str = "recommend re-shard / evict host",
+    ):
+        self.factor = factor
+        self.window = window
+        self.min_samples = min_samples
+        self.action = action
+        self.step_times: list[float] = []
+        self.events: list[dict] = []
+
+    def observe(self, step: int, dt: float) -> dict | None:
+        self.step_times.append(dt)
+        recent = self.step_times[-self.window:]
+        if len(recent) < self.min_samples:
+            return None
+        med = statistics.median(recent)
+        if dt > self.factor * med:
+            event = {
+                "step": step, "seconds": dt, "median": med,
+                "action": self.action,
+            }
+            self.events.append(event)
+            return event
+        return None

@@ -17,6 +17,16 @@ that table back with `--latency-table` (or to `repro.tune.fit
 wall-clock instead of cost-model constants. `--profile-dir` opens a
 `jax.profiler` device-trace window around the serve loop; the obs spans'
 TraceAnnotations line up host spans with device slices.
+
+Fault containment (`repro.guard`): with `--control-every` the controller
+carries a QuarantineBreaker — array sentinels ride the ctrl snapshot, tripped
+lanes are pinned to basic/dense and scrubbed, transitions land in the
+decision journal as `kind="quarantine"` rows. `--inject <scenario[:k=v,...]>`
+arms a deterministic fault (see `repro.guard.inject.SCENARIOS`: poison-nan,
+poison-sim, ctrl-garbage, poison-counters, lying-telemetry, torn-journal,
+corrupt-ckpt, stall) at the real seams, so a chaos run exercises the exact
+production wiring. Each decode step is timed; the straggler watchdog feeds
+stall events into the same breaker.
 """
 
 from __future__ import annotations
@@ -103,10 +113,15 @@ def main() -> None:
                     "latest step at start (ctrl-block precedence: checkpoint "
                     "< tuned table < live controller, resolutions journaled) "
                     "and save the final cache at exit; requires --reuse")
+    ap.add_argument("--inject", default=None, metavar="SCENARIO[:k=v,...]",
+                    help="arm a deterministic fault scenario "
+                    "(repro.guard.inject.SCENARIOS) at the production seams "
+                    "— e.g. poison-nan:at_step=12,site=mlp_up — for chaos "
+                    "runs; requires --reuse")
     args = ap.parse_args()
 
     for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity",
-                 "control_every", "control_journal", "cache_ckpt"):
+                 "control_every", "control_journal", "cache_ckpt", "inject"):
         if getattr(args, flag) and not args.reuse:
             ap.error(f"--{flag.replace('_', '-')} requires --reuse")
     if args.control_journal and not args.control_every:
@@ -243,11 +258,29 @@ def main() -> None:
 
     sstate = {"state": state, "rcache": rcache}
 
+    # Fault plane: the armed injector (chaos runs) plus the step clock the
+    # straggler watchdog reads. Armed independently of the control plane — a
+    # poisoned run WITHOUT the breaker is the useful negative control.
+    injector = None
+    watchdog = None
+    if args.inject:
+        from repro.guard import FaultInjector
+
+        injector = FaultInjector.from_spec(args.inject)
+        print(f"fault injection armed: {injector.scenario} "
+              f"{injector.params} site={injector.site} "
+              f"layer={injector.layer}")
+    if engine is not None:
+        from repro.guard import StragglerWatchdog
+
+        watchdog = StragglerWatchdog()
+
     # Learned admission + online control plane (repro.control): the predictor
     # learns per-session similarity from retirement telemetry, the controller
     # retunes the policy / adapts budgets from live counters on a cadence.
     predictor = None
     controller = None
+    breaker = None
     if args.control_every > 0:
         from repro.control import AdmissionPredictor, ControlConfig, Controller
 
@@ -271,11 +304,19 @@ def main() -> None:
                         meta=latency.meta,
                     )
         predictor = AdmissionPredictor()
+        # the guard plane rides the controller cadence: sentinels are read
+        # from the same ctrl snapshot, containment decisions land in the
+        # same journal stream, and the breaker's probation clock ticks in
+        # control intervals
+        from repro.guard import QuarantineBreaker
+
+        breaker = QuarantineBreaker()
         controller = Controller(
             ControlConfig(),
             admission=predictor,
             journal=journal,
             latency=latency,
+            guard=breaker,
         )
 
     def prefill_fn(prompt, slot):
@@ -292,15 +333,33 @@ def main() -> None:
         sstate["rcache"] = reset_slot(sstate["rcache"], slot)
         return int(greedy_sample(logits[slot: slot + 1, -1:])[0, 0])
 
+    step_clock = {"step": 0}
+
     def decode_fn(tokens):
         nonlocal sstate
+        step_clock["step"] += 1
+        t0 = obs_trace.now()
+        if injector is not None:
+            # the stall scenario lives INSIDE the timed region — exactly
+            # where a straggler host's slowness would land
+            injector.maybe_stall(step_clock["step"])
         logits, new_state, new_rcache = decode_jit(
             params, jnp.asarray(tokens), sstate["state"], sstate["rcache"]
         )
         sstate["state"] = new_state
         sstate["rcache"] = new_rcache
-        return np.asarray(greedy_sample(logits[:, -1:]))[:, :, 0] \
+        out = np.asarray(greedy_sample(logits[:, -1:]))[:, :, 0] \
             if logits.ndim == 4 else np.asarray(greedy_sample(logits))
+        # np.asarray above forced the device sync, so dt is real step time
+        if watchdog is not None:
+            event = watchdog.observe(step_clock["step"], obs_trace.now() - t0)
+            if event is not None:
+                print(f"straggler: step {event['step']} took "
+                      f"{event['seconds']:.3f}s vs median "
+                      f"{event['median']:.3f}s")
+                if breaker is not None:
+                    breaker.note_stall(event)
+        return out
 
     telemetry_fn = None
     on_retire = None
@@ -377,14 +436,41 @@ def main() -> None:
                     rep = controller.step(
                         engine, sstate["rcache"], step=step_idx)
                 if registry is not None:
-                    from repro.obs.metrics import observe_control_report
+                    from repro.obs.metrics import (
+                        observe_control_report,
+                        observe_guard_report,
+                    )
 
                     observe_control_report(registry, rep)
+                    if controller.last_guard_report is not None:
+                        observe_guard_report(
+                            registry, controller.last_guard_report)
                 if rep.decisions:
                     print("\n".join(rep.summary_lines()))
                 if rep.changed:
                     # live spec/mode changes are baked into the traced step
                     decode_jit = jit_decode_factory()
+
+    if injector is not None:
+        # chain the injector through the production seams: cache poisoning
+        # lands post-decode (before the controller's next look), forged
+        # telemetry rides the real retirement path
+        base_on_step, base_telemetry = on_step, telemetry_fn
+
+        def on_step(step_idx):
+            n_fired = len(injector.fired)
+            sstate["rcache"] = injector.on_cache_update(
+                sstate["rcache"], step_idx)
+            if len(injector.fired) > n_fired:
+                print(f"inject @step {step_idx}: "
+                      f"{injector.fired[-1]['detail']}")
+            if base_on_step is not None:
+                base_on_step(step_idx)
+
+        if base_telemetry is not None:
+            def telemetry_fn(slot):
+                return injector.on_telemetry(
+                    base_telemetry(slot), step_clock["step"])
 
     batcher = ContinuousBatcher(
         batch_slots=args.batch_slots,
@@ -439,6 +525,16 @@ def main() -> None:
         if controller.journal is not None:
             print(f"decision journal: {controller.journal.rows_written} rows "
                   f"-> {controller.journal.path}")
+    if breaker is not None:
+        states = breaker.lane_states()
+        lanes = ", ".join(
+            f"{s}" + (f"@{l}" if l is not None else "") + f"={st}"
+            for (s, l), st in sorted(states.items(),
+                                     key=lambda kv: (kv[0][0], kv[0][1] or 0)))
+        print(f"guard plane: {breaker.total_trips} sentinel trips, "
+              f"{breaker.stall_windows} stall windows, "
+              f"{breaker.quarantined_lanes()} lanes quarantined"
+              + (f" [{lanes}]" if lanes else ""))
     if args.cache_ckpt and engine is not None:
         from repro.ckpt.checkpoint import save_checkpoint
 
@@ -446,6 +542,15 @@ def main() -> None:
                         sstate["rcache"])
         print(f"cache checkpoint: saved step {batcher.stats['steps']} "
               f"to {args.cache_ckpt}")
+    if injector is not None:
+        # at-rest scenarios fire at exit, against the artifacts just written
+        if args.control_journal:
+            injector.tear_journal(args.control_journal)
+        if args.cache_ckpt:
+            injector.corrupt_checkpoint(args.cache_ckpt)
+        print(f"fault injection: {len(injector.fired)} fault(s) fired")
+        for ev in injector.fired:
+            print(f"  {ev['scenario']} @step {ev['step']}: {ev['detail']}")
     if args.obs_dir:
         from repro.obs.export import write_jsonl, write_prometheus
         from repro.obs.metrics import observe_sensor_report, observe_spans

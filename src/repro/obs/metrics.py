@@ -167,6 +167,19 @@ def observe_control_report(registry: MetricsRegistry, report) -> None:
         registry.counter("control_retraces").inc(len(report.retrace))
 
 
+def observe_guard_report(registry: MetricsRegistry, report) -> None:
+    """Guard-plane breaker pass → sentinel-trip counters by site and check,
+    live quarantined-lane gauge, stall counter. The interesting alerting
+    signal is `guard_sentinel_trips` staying at zero on healthy runs —
+    the chaos CI job asserts the non-zero side."""
+    for t in report.trips:
+        registry.counter("guard_sentinel_trips",
+                         site=t.site, check=t.check).inc()
+    if report.stalled:
+        registry.counter("guard_stall_windows").inc()
+    registry.gauge("guard_quarantined_lanes").set(report.quarantined_lanes)
+
+
 def observe_spans(registry: MetricsRegistry,
                   span_rows: Iterable[dict[str, Any]]) -> None:
     """Span durations → one histogram per span name (seconds)."""

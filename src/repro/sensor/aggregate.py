@@ -36,7 +36,11 @@ import numpy as np
 #       the array-resident ctrl block (site rows say "mixed" when a stack
 #       settled distinct per-layer modes) plus budget_occupancy (the ctrl
 #       block's live-tile-fraction EMA); v2-v4 traces still load
-SENSOR_SCHEMA_VERSION = 5
+#   6 — adds sentinel_trips (guard-plane containment actions on the lane,
+#       bumped host-side by the QuarantineBreaker; layers SUM at site
+#       granularity — each lane quarantines independently); v2-v5 traces
+#       still load with the field defaulted to 0
+SENSOR_SCHEMA_VERSION = 6
 
 
 @dataclasses.dataclass
@@ -71,6 +75,9 @@ class SiteSensor:
     # Live-tile-fraction EMA from the ctrl block (per-layer budget occupancy;
     # 1.0 = every K-block churns every step — nothing for a budget to save).
     budget_occupancy: float = 0.0
+    # Guard-plane containment actions that quarantined this lane (host-side
+    # bumps by the QuarantineBreaker; summed over layers at site granularity).
+    sentinel_trips: int = 0
     # Site geometry — what the tune fitter needs to model bookkeeping cost
     # and pick a block_k without re-deriving the model architecture.
     in_features: int = 0
@@ -244,6 +251,8 @@ def _entry_rows(name: str, entry: dict, spec=None,
             if "grid_steps" in sensor else 0.0,
             overflow_fallbacks=int(leaf("overflow_fallbacks", layer))
             if "overflow_fallbacks" in sensor else 0,
+            sentinel_trips=int(leaf("sentinel_trips", layer))
+            if "sentinel_trips" in sensor else 0,
             exec_path=resolve_exec_path(spec, impl) if spec else "auto",
             budget_occupancy=float(occupancy[layer]),
             in_features=spec.in_features if spec else 0,
@@ -283,6 +292,8 @@ def _sum_rows(name: str, rows: list[SiteSensor]) -> SiteSensor:
         grid_steps=sum(r.grid_steps for r in rows),
         # each layer slice's evaluation falls back independently
         overflow_fallbacks=sum(r.overflow_fallbacks for r in rows),
+        # each lane quarantines independently: sum, unlike suppressed_flips
+        sentinel_trips=sum(r.sentinel_trips for r in rows),
         exec_path=rows[0].exec_path,
         budget_occupancy=float(np.mean([r.budget_occupancy for r in rows])),
         in_features=rows[0].in_features,
@@ -313,7 +324,7 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         for k in ("skipped_tiles", "computed_tiles", "skipped_macs",
                   "computed_macs", "skipped_weight_bytes", "total_weight_bytes",
                   "reused_out_elems", "mode_transitions", "suppressed_flips",
-                  "grid_steps", "overflow_fallbacks")
+                  "grid_steps", "overflow_fallbacks", "sentinel_trips")
     }
     total_tiles = tot["skipped_tiles"] + tot["computed_tiles"]
     total_macs = tot["skipped_macs"] + tot["computed_macs"]

@@ -62,6 +62,10 @@ def init_site_counters(batch: int) -> dict[str, jax.Array]:
         # by ReuseEngine.refresh_modes; a site-level event, so stacked sites
         # see every layer slice bumped together and aggregation takes the max)
         "suppressed_flips": jnp.zeros((), jnp.int32),
+        # guard-plane sentinel trips that quarantined this lane (incremented
+        # host-side by the QuarantineBreaker per containment action; per-layer
+        # on stacked sites — aggregation SUMS lanes, unlike suppressed_flips)
+        "sentinel_trips": jnp.zeros((), jnp.int32),
         # per-slot hit-rate accumulators (reset per lane on slot recycle)
         "slot_hit_sum": jnp.zeros((batch,), jnp.float32),
         "slot_steps": jnp.zeros((batch,), jnp.int32),

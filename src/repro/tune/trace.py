@@ -101,10 +101,11 @@ _REQUIRED_SITE_FIELDS = (
 )
 
 
-# v2-v4 rows lack only fields this loader defaults (grid_steps + exec_path on
-# v2, overflow_fallbacks on v2/v3, budget_occupancy below v5), so they stay
-# loadable; v1 (unversioned) rows lack the geometry and are refused.
-SUPPORTED_SCHEMA_VERSIONS = (2, 3, 4, SENSOR_SCHEMA_VERSION)
+# v2-v5 rows lack only fields this loader defaults (grid_steps + exec_path on
+# v2, overflow_fallbacks on v2/v3, budget_occupancy below v5, sentinel_trips
+# below v6), so they stay loadable; v1 (unversioned) rows lack the geometry
+# and are refused.
+SUPPORTED_SCHEMA_VERSIONS = (2, 3, 4, 5, SENSOR_SCHEMA_VERSION)
 
 
 def _check_version(row: dict[str, Any], lineno: int, path: str) -> None:

@@ -1,6 +1,7 @@
 """Checkpointing: roundtrip exactness, atomicity, GC, async, fault recovery."""
 
 import os
+import signal
 import threading
 import time
 
@@ -11,8 +12,10 @@ import pytest
 
 from repro.ckpt.checkpoint import (
     AsyncCheckpointer,
+    CorruptCheckpointError,
     gc_checkpoints,
     latest_step,
+    latest_valid_step,
     restore_checkpoint,
     save_checkpoint,
 )
@@ -119,6 +122,75 @@ def test_resilient_loop_recovers_from_injected_faults(tmp_path):
     assert calls["fails"] == 2
     # sum of 0..9 regardless of the mid-flight failures
     assert float(state["x"]) == sum(range(10))
+
+
+def test_corrupt_checkpoint_detected_and_walked_past(tmp_path):
+    """A COMPLETE marker proves the save finished, not that the bytes are
+    still good: bitrot behind the marker must raise (never restore silently
+    wrong weights) and `latest_valid_step` must walk past it to the newest
+    step whose hashes verify."""
+    from repro.guard.inject import FaultInjector
+
+    state = make_state()
+    save_checkpoint(tmp_path, 1, state)
+    save_checkpoint(tmp_path, 2, state)
+    # flip bytes mid-file in the newest step's payload (the production
+    # corruption path the chaos injector drives)
+    FaultInjector("corrupt-ckpt").corrupt_checkpoint(tmp_path)
+
+    struct = jax.eval_shape(lambda: make_state())
+    with pytest.raises(CorruptCheckpointError, match="sha256 mismatch"):
+        restore_checkpoint(tmp_path, 2, struct)
+    assert latest_step(tmp_path) == 2        # the marker still lies
+    assert latest_valid_step(tmp_path) == 1  # the hashes don't
+    assert_tree_equal(state, restore_checkpoint(tmp_path, 1, struct))
+
+    # the resilient loop resumes from the older VALID step, not the marker
+    loop = ResilientLoop(
+        lambda s, b: (s, {}), lambda s: None,
+        LoopConfig(ckpt_dir=str(tmp_path)),
+    )
+    resumed, start = loop.resume_or_init(make_state)
+    assert start == 2
+    assert_tree_equal(state, resumed)
+
+
+def test_missing_manifest_behind_marker_is_corrupt(tmp_path):
+    save_checkpoint(tmp_path, 3, make_state())
+    (tmp_path / "step_000003" / "manifest.json").unlink()
+    with pytest.raises(CorruptCheckpointError, match="manifest.json missing"):
+        restore_checkpoint(tmp_path, 3, jax.eval_shape(lambda: make_state()))
+    assert latest_valid_step(tmp_path) is None
+
+
+def test_preemption_saves_final_checkpoint_and_resumes(tmp_path):
+    """SIGTERM mid-run → synchronous final checkpoint before exit, and a
+    fresh loop resumes from exactly that step (cloud preemption semantics).
+    The signal is raised from inside a step so the handler fires on the
+    main thread, like a real preemption notice."""
+
+    def step_fn(state, batch):
+        if int(state["x"]) == 3:
+            os.kill(os.getpid(), signal.SIGTERM)
+        return {"x": state["x"] + 1.0}, {}
+
+    # ckpt_every far beyond the run: the ONLY checkpoint is the preemption one
+    loop = ResilientLoop(
+        step_fn, lambda s: None,
+        LoopConfig(ckpt_dir=str(tmp_path), ckpt_every=1000),
+    )
+    state = loop.run({"x": jnp.float32(0.0)}, 0, 10)
+    assert float(state["x"]) == 4.0          # stopped early, step 3 finished
+    assert latest_valid_step(tmp_path) == 3  # final save committed + verified
+
+    loop2 = ResilientLoop(
+        step_fn, lambda s: None,
+        LoopConfig(ckpt_dir=str(tmp_path), ckpt_every=1000),
+    )
+    resumed, start = loop2.resume_or_init(lambda: {"x": jnp.float32(0.0)})
+    assert start == 4 and float(resumed["x"]) == 4.0
+    final = loop2.run(resumed, start, 6)
+    assert float(final["x"]) == 10.0         # the run completes exactly
 
 
 def test_straggler_watchdog_flags_slow_steps(tmp_path):

@@ -1,0 +1,445 @@
+"""repro.guard — serving-plane fault containment (ISSUE 8 acceptance).
+
+Load-bearing properties:
+
+* array sentinels detect every injected corruption class (non-finite
+  prev_out, sim_ema range, ctrl-lane garbage, counter-conservation breaks)
+  and name the offending (site, layer, check) with measured evidence;
+* the quarantine breaker contains a tripped lane the SAME control interval:
+  mode pinned basic via ctrl write, poisoned state scrubbed, replayable
+  journal decision; lockout drains to probation and clean windows re-admit,
+  with exponential backoff on re-offense and stalls voiding probation;
+* the fault injector is deterministic and replayable (named scenarios,
+  `from_spec` round trip), and its at-rest targets (torn journal, corrupt
+  checkpoint) drive the durable-state hardening satellites;
+* chaos e2e: a NaN poisoned into a live reuse lane reaches the outputs
+  (real blast radius), the controller+guard cadence quarantines it, and
+  post-containment outputs are finite AND bitwise-exact vs the dense
+  oracle while the journal chains quarantined→probation→active and
+  replays cleanly; the same stream without injection trips nothing.
+"""
+
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.control import AdmissionPredictor, ControlConfig, Controller, load_journal
+from repro.control.replay import replay_rows
+from repro.control.report import ControlReport, Decision, DecisionJournal
+from repro.core import ReuseEngine, ReusePolicy, SiteTunables
+from repro.guard import (
+    SCENARIOS,
+    FaultInjector,
+    GuardConfig,
+    QuarantineBreaker,
+    evaluate_snapshot,
+    sentinel_lanes,
+    shadow_check,
+)
+
+L, M, K, N = 2, 2, 64, 32
+
+
+def _engine(mode="auto", site="stack"):
+    """Stacked integer-exact site (scale 1.0: reuse telescoping is bitwise
+    against the quantized dense oracle) with a permissive policy so lanes
+    sit in reuse mode — the state a poisoned prev_out lane persists in."""
+    policy = ReusePolicy(site_tunables={site: SiteTunables(
+        sim_threshold=0.0, min_work_flops=0.0, exec_path="dense",
+    )})
+    eng = ReuseEngine(policy=policy)
+    eng.register(site, K, N, n_layers=L, block_m=2, block_k=32, mode=mode)
+    eng.sites[site] = dataclasses.replace(eng.sites[site], fixed_scale=1.0)
+    return eng
+
+
+def _make_step(eng, w, site="stack"):
+    @jax.jit
+    def step(xs, entry):
+        def body(carry, sl):
+            x_l, e_l = sl
+            out, new_e, _ = eng.apply(site, x_l, w, None, e_l)
+            return carry, (out, new_e)
+
+        _, (outs, new_entry) = jax.lax.scan(body, 0, (xs, entry))
+        return outs, new_entry
+
+    return step
+
+
+def _sticky_inputs():
+    rng = np.random.default_rng(7)
+    return jnp.asarray(rng.integers(-3, 4, size=(L, M, K)).astype(np.float32))
+
+
+def _weights():
+    rng = np.random.default_rng(8)
+    return jnp.asarray(rng.integers(-2, 3, size=(K, N)).astype(np.float32))
+
+
+# ------------------------------------------------------------ array sentinels
+
+def test_sentinel_lanes_detect_each_corruption_class():
+    eng = _engine()
+    cache = eng.init_cache(M)
+    entry = cache["stack"]
+
+    lanes = {k: np.asarray(v) for k, v in sentinel_lanes(entry).items()}
+    assert evaluate_snapshot("stack", lanes, stacked=True) == []
+
+    # non-finite prev_out, layer 1 only
+    bad = dict(entry, prev_out=entry["prev_out"].at[1, 0, 0].set(jnp.nan))
+    trips = evaluate_snapshot("stack", sentinel_lanes(bad), stacked=True)
+    assert [(t.layer, t.check) for t in trips] == [(1, "nonfinite_out")]
+    assert "1 non-finite" in trips[0].evidence
+
+    # sim_ema outside [0, 1] (an EMA of match fractions can't leave the range)
+    bad = dict(entry, sim_ema=entry["sim_ema"].at[0, 0].set(1.5))
+    trips = evaluate_snapshot("stack", sentinel_lanes(bad), stacked=True)
+    assert [(t.layer, t.check) for t in trips] == [(0, "sim_range")]
+
+    # ctrl garbage: every range check lands in the bitmask evidence
+    ctrl = dict(entry["ctrl"])
+    ctrl["mode_id"] = ctrl["mode_id"].at[0].set(7)
+    ctrl["cooldown"] = ctrl["cooldown"].at[0].set(-3)
+    ctrl["sim_threshold"] = ctrl["sim_threshold"].at[0].set(9.0)
+    trips = evaluate_snapshot(
+        "stack", sentinel_lanes(dict(entry, ctrl=ctrl)), stacked=True)
+    assert [(t.layer, t.check) for t in trips] == [(0, "ctrl_range")]
+    for name in ("mode_id", "cooldown", "sim_threshold"):
+        assert name in trips[0].evidence
+
+
+def test_sentinel_counter_conservation_window():
+    """Δskipped + Δcomputed must equal Δsteps·gm·gk per layer; a block_k
+    move (caller passes tiles_per_eval=None) invalidates one window instead
+    of tripping falsely."""
+    prev = {"skipped_l": np.array([4, 4]), "computed_l": np.array([0, 0]),
+            "steps_l": np.array([1, 1])}
+    ok = {"bad_out": np.zeros(2, np.int32), "bad_sim": np.zeros(2, np.int32),
+          "skipped_l": np.array([10, 8]), "computed_l": np.array([2, 4]),
+          "steps_l": np.array([3, 3])}
+    assert evaluate_snapshot(
+        "s", ok, stacked=True, tiles_per_eval=4, prev=prev) == []
+
+    broken = dict(ok, skipped_l=np.array([11, 8]))  # phantom skip, layer 0
+    trips = evaluate_snapshot(
+        "s", broken, stacked=True, tiles_per_eval=4, prev=prev)
+    assert [(t.layer, t.check) for t in trips] == [(0, "conservation")]
+    assert "9 != " in trips[0].evidence and "8" in trips[0].evidence
+
+    # geometry moved this window: the delta mixes tile units — no verdict
+    assert evaluate_snapshot(
+        "s", broken, stacked=True, tiles_per_eval=None, prev=prev) == []
+
+
+def test_sentinel_lanes_ride_the_ctrl_snapshot():
+    """Detection must not cost an extra device→host pass: the guard lanes
+    arrive inside the engine's one control snapshot."""
+    eng = _engine()
+    cache = eng.init_cache(M)
+    snap = eng.ctrl_snapshot(cache)["stack"]
+    for lane in ("bad_out", "bad_sim", "ctrl_bad", "quarantine",
+                 "skipped_l", "computed_l", "steps_l"):
+        assert lane in snap, lane
+
+
+# ------------------------------------------------------- quarantine breaker
+
+def test_breaker_lifecycle_trip_probation_readmit_backoff():
+    eng = _engine()
+    cache = eng.init_cache(M)
+    br = QuarantineBreaker(GuardConfig(
+        quarantine_intervals=1, probation_windows=1))
+
+    # poison layer 1, then one breaker pass: contained the same interval
+    cache["stack"] = dict(
+        cache["stack"],
+        prev_out=cache["stack"]["prev_out"].at[1, 0, 0].set(jnp.nan))
+    rep = br.step(eng, cache, step=1)
+    assert rep.tripped and rep.quarantined_lanes == 1
+    assert rep.frozen_sites == {"stack"}
+    assert br.lane_states()[("stack", 1)] == "quarantined"
+    assert eng.layer_modes(cache, "stack")[1] == "basic"
+    assert int(np.asarray(cache["stack"]["ctrl"]["quarantine"])[1]) == 1
+    # poisoned state scrubbed, trip counter bumped
+    assert np.isfinite(np.asarray(cache["stack"]["prev_out"])).all()
+    assert int(np.asarray(
+        cache["stack"]["sensor"]["sentinel_trips"]).sum()) == 1
+    assert eng.exec_cooldown["stack"] >= 1
+    d = [x for x in rep.decisions if x.field == "state"]
+    assert (d[0].before, d[0].after, d[0].layer) == ("active", "quarantined", 1)
+    assert "nonfinite_out" in d[0].reason
+
+    # lockout (1 interval) drains -> probation; site stays frozen meanwhile
+    rep = br.step(eng, cache, step=2)
+    assert not rep.tripped
+    assert br.lane_states()[("stack", 1)] == "probation"
+    assert int(np.asarray(cache["stack"]["ctrl"]["quarantine"])[1]) == 0
+
+    # a stalled window proves nothing: probation credit is voided
+    br.note_stall({"step": 2, "seconds": 0.5, "median": 0.01,
+                   "action": "recommend re-shard / evict host"})
+    rep = br.step(eng, cache, step=3)
+    assert rep.stalled and br.stall_windows == 1
+    assert br.lane_states()[("stack", 1)] == "probation"
+    assert any(x.field == "stall_windows" for x in rep.decisions)
+
+    # one clean window re-admits (probation_windows=1)
+    rep = br.step(eng, cache, step=4)
+    assert br.lane_states()[("stack", 1)] == "active"
+    d = [x for x in rep.decisions if x.field == "state"]
+    assert (d[0].before, d[0].after) == ("probation", "active")
+
+    # re-offense: exponential backoff doubles the lockout
+    cache["stack"] = dict(
+        cache["stack"],
+        prev_out=cache["stack"]["prev_out"].at[1, 0, 0].set(jnp.inf))
+    rep = br.step(eng, cache, step=5)
+    assert br.lane_states()[("stack", 1)] == "quarantined"
+    assert br._lanes[("stack", 1)].lockout == 2
+    assert int(np.asarray(cache["stack"]["ctrl"]["quarantine"])[1]) == 2
+    d = [x for x in rep.decisions if x.field == "state"]
+    assert "offense #2" in d[0].reason and "lockout 2" in d[0].reason
+
+
+def test_breaker_rebuilds_garbage_ctrl_lanes_from_policy():
+    """A ctrl_range trip means the very lanes the breaker writes may be
+    garbage — containment rebuilds the lane's operating point from the
+    policy table, not from the corrupted block."""
+    eng = _engine()
+    cache = eng.init_cache(M)
+    inj = FaultInjector("ctrl-garbage", at_step=1, layer=0)
+    cache = inj.on_cache_update(cache, 1)
+    assert int(np.asarray(cache["stack"]["ctrl"]["mode_id"])[0]) == 7
+
+    br = QuarantineBreaker()
+    rep = br.step(eng, cache, step=1)
+    assert [t.check for t in rep.trips] == ["ctrl_range"]
+    ctrl = cache["stack"]["ctrl"]
+    t = eng.policy.resolve("stack", layer=0)
+    assert int(np.asarray(ctrl["mode_id"])[0]) in (0, 1)
+    assert float(np.asarray(ctrl["sim_threshold"])[0]) == t.sim_threshold
+    assert float(np.asarray(ctrl["min_work"])[0]) == t.min_work_flops
+    assert int(np.asarray(ctrl["cooldown"])[0]) >= 0
+
+
+def test_shadow_check_proves_current_operating_point(monkeypatch):
+    eng = _engine()
+    ok, detail = shadow_check(eng, "stack")
+    assert ok and "bitwise-exact" in detail
+
+    # a diverging substrate quarantines the whole site (layer=None)
+    cache = eng.init_cache(M)
+    br = QuarantineBreaker(GuardConfig(shadow_every=1))
+    monkeypatch.setattr("repro.guard.quarantine.shadow_check",
+                        lambda *a, **k: (False, "forced divergence"))
+    rep = br.step(eng, cache, step=1)
+    assert rep.shadow == ("stack", False, "forced divergence")
+    assert [(t.check, t.layer) for t in rep.trips] == [("shadow", None)]
+    assert br.lane_states()[("stack", None)] == "quarantined"
+    assert set(eng.layer_modes(cache, "stack")) == {"basic"}
+
+
+# ----------------------------------------------------------- fault injector
+
+def test_injector_spec_roundtrip_and_validation():
+    inj = FaultInjector.from_spec("poison-nan:at_step=3,site=s,layer=1,seed=5")
+    assert (inj.scenario, inj.site, inj.layer, inj.seed) == (
+        "poison-nan", "s", 1, 5)
+    assert inj.params["at_step"] == 3
+
+    with pytest.raises(ValueError, match="unknown fault scenario"):
+        FaultInjector("nope")
+    with pytest.raises(ValueError, match="unknown"):
+        FaultInjector("stall", bogus=1)
+    with pytest.raises(ValueError, match="bad injector spec"):
+        FaultInjector.from_spec("stall:seconds")
+    assert set(SCENARIOS) >= {
+        "poison-nan", "poison-sim", "ctrl-garbage", "poison-counters",
+        "lying-telemetry", "torn-journal", "corrupt-ckpt", "stall"}
+
+
+def test_injector_cache_scenarios_fire_deterministically():
+    eng = _engine()
+    cache = eng.init_cache(M)
+
+    inj = FaultInjector("poison-nan", at_step=4)
+    assert inj.on_cache_update(cache, 3) is cache and not inj.fired
+    poisoned = inj.on_cache_update(cache, 4)
+    assert inj.fired[0]["step"] == 4 and inj.fired[0]["layer"] == 0
+    assert not np.isfinite(np.asarray(poisoned["stack"]["prev_out"])).all()
+    # the input cache is not mutated in place
+    assert np.isfinite(np.asarray(cache["stack"]["prev_out"])).all()
+
+    sim = FaultInjector("poison-sim", at_step=1, layer=1)
+    out = sim.on_cache_update(cache, 1)
+    assert math.isnan(float(np.asarray(out["stack"]["sim_ema"])[1, 0]))
+
+    cnt = FaultInjector("poison-counters", at_step=1, bump=5)
+    out = cnt.on_cache_update(cache, 1)
+    delta = (np.asarray(out["stack"]["sensor"]["skipped_tiles"])
+             - np.asarray(cache["stack"]["sensor"]["skipped_tiles"]))
+    assert delta.sum() == 5
+
+    lie = FaultInjector("lying-telemetry", at_step=2, value=float("nan"))
+    t = {"slot": 0, "steps": 5, "hit_rate": 0.5}
+    assert lie.on_telemetry(t, 1) == t          # before at_step: untouched
+    lied = lie.on_telemetry(t, 2)
+    assert math.isnan(lied["hit_rate"]) and t["hit_rate"] == 0.5
+    assert lie.on_telemetry(t, 3) == t          # fires once
+
+
+# ------------------------------------- durable state: journal + checkpoints
+
+def _report(step, interval, before, after):
+    return ControlReport(
+        step=step, interval=interval, window_steps={}, retrace={},
+        decisions=[Decision(step=step, site="s", kind="retune",
+                            field="sim_threshold", before=before,
+                            after=after, reason="test")])
+
+
+def test_torn_journal_tail_tolerated_mid_file_refused(tmp_path):
+    path = tmp_path / "journal.jsonl"
+    j = DecisionJournal(str(path))
+    j.append(_report(1, 1, 0.1, 0.2))
+    j.append(_report(2, 2, 0.2, 0.3))
+    assert len(load_journal(str(path))) == 4  # 2 interval + 2 decision rows
+
+    FaultInjector("torn-journal").tear_journal(path)
+    rows = load_journal(str(path))
+    assert rows[-1]["kind"] == "torn_tail" and rows[-1]["prefix"]
+    # the surviving prefix still replays (the torn row lost, not corrupted)
+    assert replay_rows(rows).ok
+
+    # mid-file garbage is NOT a crash artifact — refuse the whole journal
+    lines = path.read_text().splitlines()
+    lines[1] = lines[1][: len(lines[1]) // 2]
+    path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="mid-file"):
+        load_journal(str(path))
+
+
+def test_chaos_quarantine_e2e_bitwise_recovery(tmp_path):
+    """Acceptance: NaN poisoned into a live reuse lane reaches the outputs;
+    the controller+guard cadence quarantines the lane, scrubs it, and every
+    post-containment step is finite and bitwise-exact vs the dense oracle;
+    the journal chains quarantined→probation→active and replays; the lane
+    re-promotes to reuse once the quarantine drains."""
+    w = _weights()
+    xs = _sticky_inputs()
+
+    eng = _engine()
+    cache = eng.init_cache(M)
+    step = _make_step(eng, w)
+
+    oracle = _engine(mode="basic")
+    ocache = oracle.init_cache(M)
+    ostep = _make_step(oracle, w)
+
+    inj = FaultInjector("poison-nan", at_step=5, layer=0)
+    journal = DecisionJournal(str(tmp_path / "journal.jsonl"))
+    br = QuarantineBreaker(GuardConfig(
+        quarantine_intervals=1, probation_windows=1))
+    # min_window_steps far above the run isolates the guard plane: the
+    # retuner accumulates forever while the breaker acts every interval
+    ctl = Controller(ControlConfig(min_window_steps=100),
+                     journal=journal, guard=br)
+
+    saw_poisoned_output = False
+    for t in range(1, 15):
+        outs, cache["stack"] = step(xs, cache["stack"])
+        oouts, ocache["stack"] = ostep(xs, ocache["stack"])
+        outs = np.asarray(outs)
+        if t == 6:
+            # blast radius is real: the skipped lane serves the NaN
+            saw_poisoned_output = not np.isfinite(outs).all()
+        elif t >= 7:
+            assert np.isfinite(outs).all(), f"step {t} not contained"
+            np.testing.assert_array_equal(outs, np.asarray(oouts))
+        cache = inj.on_cache_update(cache, t)
+        if t % 2 == 0:
+            rep = ctl.step(eng, cache, step=t)
+            assert not rep.changed  # containment never forces a retrace
+    assert saw_poisoned_output, "fault never reached an output"
+    assert inj.fired and br.total_trips >= 1
+
+    # lifecycle drained: lane re-admitted, mode re-promoted, ctrl clean
+    assert br.lane_states()[("stack", 0)] == "active"
+    assert int(np.asarray(cache["stack"]["ctrl"]["quarantine"]).max()) == 0
+    assert eng.layer_modes(cache, "stack")[0] == "reuse"
+
+    # journal chains the full lifecycle for (stack, layer 0) and replays
+    rows = load_journal(str(tmp_path / "journal.jsonl"))
+    chain = [(r["before"], r["after"]) for r in rows
+             if r.get("decision_kind") == "quarantine"
+             and r.get("field") == "state" and r.get("layer") == 0]
+    assert chain == [("active", "quarantined"), ("quarantined", "probation"),
+                     ("probation", "active")]
+    assert replay_rows(rows).ok
+
+    # negative control: same stream, no injection -> zero trips
+    eng2 = _engine()
+    cache2 = eng2.init_cache(M)
+    step2 = _make_step(eng2, w)
+    br2 = QuarantineBreaker(GuardConfig(
+        quarantine_intervals=1, probation_windows=1))
+    ctl2 = Controller(ControlConfig(min_window_steps=100), guard=br2)
+    for t in range(1, 15):
+        outs2, cache2["stack"] = step2(xs, cache2["stack"])
+        if t % 2 == 0:
+            ctl2.step(eng2, cache2, step=t)
+    assert br2.total_trips == 0
+    assert not any(d.kind == "quarantine"
+                   for r in ctl2.reports for d in r.decisions)
+
+
+# --------------------------------------------- hardened admission predictor
+
+def test_admission_rejects_lying_telemetry():
+    class _Req:
+        def __init__(self, rid, slot, session, hit, steps=5):
+            self.rid, self.slot, self.session = rid, slot, session
+            self.telemetry = {"slot": slot, "steps": steps, "hit_rate": hit,
+                              "n_sites": 1}
+
+    pred = AdmissionPredictor(decay=1.0, prior=0.5)
+    pred.observe_retirement(_Req(0, 0, "liar", float("nan")))
+    assert "liar" not in pred.sessions
+    assert pred.rejected_observations == 1
+    pred.observe_retirement(_Req(1, 0, "liar", float("inf")))
+    assert pred.rejected_observations == 2
+
+    # out-of-range finite values are clamped, not trusted
+    pred.observe_retirement(_Req(2, 0, "hype", 5.0))
+    assert pred.sessions["hype"] == 1.0
+    pred.observe_retirement(_Req(3, 0, "doom", -2.0))
+    assert pred.sessions["doom"] == 0.0
+    assert pred.stats()["rejected_observations"] == 2
+
+
+# ------------------------------------------------------------- observability
+
+def test_guard_metrics_land_in_registry():
+    from repro.guard.quarantine import GuardReport
+    from repro.guard.sentinel import Trip
+    from repro.obs.metrics import MetricsRegistry, observe_guard_report
+
+    reg = MetricsRegistry()
+    rep = GuardReport(
+        step=8, interval=1,
+        trips=[Trip(site="s", layer=0, check="nonfinite_out", evidence="e")],
+        decisions=[], frozen_sites={"s"}, stalled=True, quarantined_lanes=1)
+    observe_guard_report(reg, rep)
+    rows = {(r["name"], tuple(sorted(r["labels"].items()))): r
+            for r in reg.snapshot()}
+    assert rows[("guard_sentinel_trips",
+                 (("check", "nonfinite_out"), ("site", "s")))]["value"] == 1
+    assert rows[("guard_stall_windows", ())]["value"] == 1
+    assert rows[("guard_quarantined_lanes", ())]["value"] == 1

@@ -11,8 +11,9 @@ Load-bearing properties:
 * the latency table round-trips save→load, falls back layer→None on lookup,
   and — handed to the harvest model via `FitConfig.latency` — changes fitted
   tunables vs the constant energy-model pricing (the ROADMAP payoff);
-* the control journal emits schema v3 (stamped when ids are set), still
-  loads v1/v2 emissions, and rejects future versions loudly;
+* the control journal emits the current schema (stamped when ids are set),
+  still loads every prior version's emissions, and rejects future versions
+  loudly;
 * checkpoint-vs-tuned-table restore precedence: covered lanes re-sync to the
   table, uncovered lanes adopt the checkpointed values into the policy
   table, every resolution journals as a replayable kind="restore" Decision.
@@ -353,7 +354,7 @@ def test_measured_pricing_falls_back_without_coverage():
 
 # ------------------------------------------------------------ journal v3
 
-def test_journal_v3_rows_and_stamping(tmp_path):
+def test_journal_v4_rows_and_stamping(tmp_path):
     rep = ControlReport(
         step=8, interval=1, window_steps={"s": 8},
         decisions=[Decision(step=8, site="s", kind="retune",
@@ -362,7 +363,7 @@ def test_journal_v3_rows_and_stamping(tmp_path):
         retrace={},
     )
     plain = rep.to_dicts()
-    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION == 3
+    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION == 4
                for r in plain)
     assert all("trace" not in r for r in plain)  # no ids -> v2 byte layout
     with events.context(run="RJ", window=1):
@@ -393,8 +394,8 @@ def test_journal_loads_v1_v2_rejects_future(tmp_path):
     assert replay_rows(rows).ok
 
     fut = tmp_path / "future.jsonl"
-    fut.write_text(json.dumps(dict(v1_dec, schema_version=4)) + "\n")
-    with pytest.raises(ValueError, match=r"future.jsonl:1.*schema_version 4"):
+    fut.write_text(json.dumps(dict(v1_dec, schema_version=5)) + "\n")
+    with pytest.raises(ValueError, match=r"future.jsonl:1.*schema_version 5"):
         load_journal(str(fut))
 
 
@@ -447,10 +448,11 @@ def test_restore_precedence_table_wins_uncovered_adopts(tmp_path):
     assert d_b.before == pytest.approx(default_thr)
     assert d_b.after == pytest.approx(0.77)
 
-    # the journal is schema v3 and REPLAYABLE: driving the restore rows
-    # through a fresh engine reproduces the resolved thresholds
+    # the journal is current-schema and REPLAYABLE: driving the restore
+    # rows through a fresh engine reproduces the resolved thresholds
     rows = load_journal(str(jpath))
-    assert all(r["schema_version"] == 3 for r in rows)
+    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION
+               for r in rows)
     assert replay_rows(rows).ok
     fresh = ReuseEngine(policy=ReusePolicy(site_tunables={"a": table_row}))
     fresh.register("a", 64, 32, block_m=2, block_k=32)
