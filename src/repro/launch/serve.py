@@ -95,6 +95,11 @@ def main() -> None:
                     help="enable the observability plane: perf_counter spans "
                     "around serve steps/prefills, correlation ids stamped on "
                     "sensor/journal rows, metrics aggregation")
+    ap.add_argument("--replica-id", default=None,
+                    help="fleet replica identity: stamp every emitted row's "
+                    "trace block with replica=ID so a fleet aggregator "
+                    "(repro.obs.fleet) can join this replica's streams; "
+                    "unset, emission is byte-identical to before")
     ap.add_argument("--obs-dir", default=None,
                     help="export observability artifacts here (implies "
                     "--obs): metrics.prom, metrics.jsonl, spans.jsonl, and "
@@ -143,6 +148,11 @@ def main() -> None:
         events.set_ids(run=run_id)
         registry = MetricsRegistry()
         print(f"obs: tracing enabled, run={run_id}")
+    if args.replica_id:
+        # works with or without --obs: stamp() fires whenever any id is set,
+        # so even a journal/sensor-only run carries its replica identity
+        events.set_ids(replica=args.replica_id)
+        print(f"obs: replica={args.replica_id}")
 
     # One shared journal: the restore-precedence pass (below) and the online
     # controller append to the same audit stream.

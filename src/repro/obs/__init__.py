@@ -21,7 +21,15 @@ obs plane unifies them:
   table and consumed by `repro.tune.fit --latency-table` and the online
   retuner in place of constant cost-model latencies;
 * ``python -m repro.obs.top`` — live terminal view of a serve run's metrics
-  snapshots.
+  snapshots (and, with ``--fleet``, per-replica columns + health);
+* :mod:`repro.obs.stream`  — tailing JSONL readers that consume a replica's
+  obs dir incrementally, forgiving a torn final line like `load_journal`;
+* :mod:`repro.obs.fleet`   — :class:`FleetAggregator` merging N replica
+  streams into per-(replica, site, layer) and fleet-level rollups, plus the
+  typed :class:`ReplicaHealth` router signal;
+* :mod:`repro.obs.slo`     — windowed SLO/anomaly watch (skip collapse vs a
+  replica's own baseline, p95 burn, quarantine spikes) emitting attributed
+  alert rows and `fleet_*` Prometheus series.
 
 Everything here is host-side and dependency-free beyond jax/numpy; with
 tracing disabled (the default) every instrumentation point is a shared no-op.
@@ -34,6 +42,11 @@ from repro.obs.events import (
     new_run_id,
     set_ids,
     stamp,
+)
+from repro.obs.fleet import (
+    FleetAggregator,
+    ReplicaHealth,
+    export_fleet_metrics,
 )
 from repro.obs.latency import (
     LatencyStat,
@@ -50,6 +63,17 @@ from repro.obs.metrics import (
     observe_control_report,
     observe_sensor_report,
 )
+from repro.obs.slo import (
+    SLOConfig,
+    SLOWatcher,
+    load_alerts,
+)
+from repro.obs.stream import (
+    ReplicaStream,
+    TailCursor,
+    discover_replica_streams,
+    tail_jsonl,
+)
 from repro.obs.trace import (
     disable,
     drain_spans,
@@ -64,19 +88,28 @@ from repro.obs.trace import (
 
 __all__ = [
     "Counter",
+    "FleetAggregator",
     "Gauge",
     "Histogram",
     "LatencyStat",
     "LatencyTable",
     "MetricsRegistry",
+    "ReplicaHealth",
+    "ReplicaStream",
+    "SLOConfig",
+    "SLOWatcher",
+    "TailCursor",
     "build_from_spans",
     "clear_ids",
     "context",
     "current_ids",
     "disable",
+    "discover_replica_streams",
     "drain_spans",
     "enable",
+    "export_fleet_metrics",
     "is_enabled",
+    "load_alerts",
     "load_latency_table",
     "new_run_id",
     "now",
@@ -89,4 +122,5 @@ __all__ = [
     "stamp",
     "start_profile",
     "stop_profile",
+    "tail_jsonl",
 ]

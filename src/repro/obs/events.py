@@ -5,6 +5,9 @@ control-journal rows (policy decisions), and obs spans (measured wall-clock).
 Before this module they were three files with nothing in common; now every
 record is stamped with the SAME id set, so a run can be joined offline:
 
+    replica  — fleet identity of the emitting replica (serve --replica-id,
+               or the launch/replicas.py harness); the join key the fleet
+               aggregator uses to attribute rows across N obs dirs
     run      — one id per process-lifetime observation scope (a serve run)
     session  — the session the active request belongs to (admission identity)
     request  — the request id being prefillled/retired

@@ -118,6 +118,7 @@ class ContinuousBatcher:
         self.completed: list[Request] = []
         self.stats = {"steps": 0, "prefills": 0, "emitted_tokens": 0,
                       "affinity_placements": 0}
+        self._cur: np.ndarray | None = None  # decode-step token buffer
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -184,28 +185,45 @@ class ContinuousBatcher:
             if self.on_retire is not None:
                 self.on_retire(req)
 
+    @property
+    def pending(self) -> bool:
+        """Work remains: requests queued or slots actively decoding."""
+        return bool(self.active or self.queue)
+
+    def step_once(self) -> bool:
+        """Admit waiting requests and run ONE shared decode step.
+
+        Returns False when there is nothing left to do. Factored out of
+        `run` so an external driver (the N-replica harness, later the
+        router) can interleave several batchers step-by-step in one
+        process instead of letting each run to completion."""
+        if self._cur is None:
+            self._cur = np.zeros((self.batch_slots, 1), np.int32)
+        self._admit()
+        if not self.active and not self.queue:
+            return False
+        for slot, req in self.active.items():
+            self._cur[slot, 0] = req.output[-1]
+        # THE serve-step measurement: host dispatch + device execution
+        # (sync), one span per decode step, batch-occupancy tagged.
+        with span("serve_step", active=len(self.active)) as sp:
+            nxt = np.asarray(sp.sync(self.decode_fn(self._cur)))
+        self.stats["steps"] += 1
+        if self.on_step is not None:
+            self.on_step(self.stats["steps"])
+        for slot in list(self.active):
+            req = self.active[slot]
+            tok = int(nxt[slot, 0])
+            req.output.append(tok)
+            self.stats["emitted_tokens"] += 1
+            if (req.eos_id >= 0 and tok == req.eos_id) or (
+                len(req.output) >= req.max_new_tokens
+            ):
+                self._retire(slot)
+        return True
+
     def run(self) -> list[Request]:
-        cur = np.zeros((self.batch_slots, 1), np.int32)
         for _ in range(self.max_steps):
-            self._admit()
-            if not self.active and not self.queue:
+            if not self.step_once():
                 break
-            for slot, req in self.active.items():
-                cur[slot, 0] = req.output[-1]
-            # THE serve-step measurement: host dispatch + device execution
-            # (sync), one span per decode step, batch-occupancy tagged.
-            with span("serve_step", active=len(self.active)) as sp:
-                nxt = np.asarray(sp.sync(self.decode_fn(cur)))
-            self.stats["steps"] += 1
-            if self.on_step is not None:
-                self.on_step(self.stats["steps"])
-            for slot in list(self.active):
-                req = self.active[slot]
-                tok = int(nxt[slot, 0])
-                req.output.append(tok)
-                self.stats["emitted_tokens"] += 1
-                if (req.eos_id >= 0 and tok == req.eos_id) or (
-                    len(req.output) >= req.max_new_tokens
-                ):
-                    self._retire(slot)
         return self.completed

@@ -1,0 +1,537 @@
+"""repro.obs fleet plane — stream tailing, aggregation, health, SLO watch.
+
+Load-bearing properties:
+
+* `tail_jsonl` consumes only newline-terminated rows, holds a partial tail
+  back for the next poll, forgives exactly one torn FINAL line (counted)
+  when the writer is known dead, and raises on mid-file corruption;
+* a `FleetAggregator` result is insensitive to poll interleaving across
+  replica tails (host clock skew / lagging readers reorder nothing that
+  matters: every windowed statistic is keyed to its own replica's row
+  sequence);
+* duplicate run ids across replicas are rejected (a copied obs dir must not
+  silently double-count);
+* a single-replica fleet rollup is BITWISE-equal to the replica's own
+  SensorReport numbers (same formulas, same guards, same order);
+* ReplicaHealth counts quarantined lanes / stalls / trips from the journal
+  stream, and the SLO watcher attributes skip collapse, p95 burn, and
+  quarantine spikes to exactly the offending replica — clean replicas stay
+  alert-free.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.obs import events
+from repro.obs.fleet import FleetAggregator, ReplicaHealth
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import SLOConfig, SLOWatcher, load_alerts
+from repro.obs.stream import (
+    ReplicaStream,
+    TailCursor,
+    discover_replica_streams,
+    tail_jsonl,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_ids():
+    events.clear_ids()
+    yield
+    events.clear_ids()
+
+
+# --------------------------------------------------------- synthetic streams
+
+def _model_row(skipped, computed, *, steps=1, trips=0, run="run-a",
+               replica=None, hit=0.5):
+    total = skipped + computed
+    row = {
+        "kind": "model", "schema_version": 6, "steps": steps,
+        "skipped_macs": float(skipped), "computed_macs": float(computed),
+        "total_macs": float(total),
+        "mac_skip_rate": skipped / max(total, 1e-9),
+        "skipped_tiles": float(skipped) / 64.0,
+        "computed_tiles": float(computed) / 64.0,
+        "total_tiles": float(total) / 64.0,
+        "tile_skip_rate": skipped / max(total, 1e-9),
+        "skipped_weight_bytes": float(skipped) * 2,
+        "total_weight_bytes": float(total) * 2,
+        "weight_byte_skip_rate": skipped / max(total, 1e-9),
+        "grid_steps": float(computed) / 64.0,
+        "grid_step_skip_rate": 0.0,
+        "hit_rate": hit, "sentinel_trips": trips, "n_sites": 1,
+    }
+    trace = {"run": run}
+    if replica is not None:
+        trace["replica"] = replica
+    row["trace"] = trace
+    return row
+
+
+def _site_row(site, skipped, computed, *, run="run-a", replica=None):
+    total = skipped + computed
+    row = {
+        "kind": "site", "schema_version": 6, "site": site, "layer": None,
+        "steps": 1, "mode": "coarse", "exec_path": "compact",
+        "skipped_macs": float(skipped), "computed_macs": float(computed),
+        "mac_skip_rate": skipped / max(total, 1e-9),
+        "tile_skip_rate": skipped / max(total, 1e-9),
+        "grid_step_skip_rate": 0.0, "hit_rate": 0.5,
+        "total_tiles": 8, "out_features": 64, "block_n": 32,
+        "sentinel_trips": 0,
+    }
+    trace = {"run": run}
+    if replica is not None:
+        trace["replica"] = replica
+    row["trace"] = trace
+    return row
+
+
+def _append(path, rows):
+    with open(path, "a") as f:
+        for row in rows:
+            f.write(json.dumps(row) + "\n")
+
+
+def _mk_replica_dir(tmp_path, name):
+    d = tmp_path / f"replica-{name}"
+    d.mkdir(exist_ok=True)
+    return d
+
+
+# ------------------------------------------------------------------- tailing
+
+def test_tail_jsonl_holds_back_partial_line(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text(json.dumps({"a": 1}) + "\n" + '{"par')
+    cur = TailCursor()
+    assert tail_jsonl(str(p), cur) == [{"a": 1}]
+    assert cur.rows == 1 and cur.torn == 0
+    # the partial line was NOT consumed: finishing it yields the row
+    with open(p, "a") as f:
+        f.write('tial": 2}\n')
+    assert tail_jsonl(str(p), cur) == [{"partial": 2}]
+    assert cur.rows == 2 and cur.torn == 0
+    # nothing new: empty poll
+    assert tail_jsonl(str(p), cur) == []
+
+
+def test_tail_jsonl_final_torn_line_forgiven_and_counted(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text(json.dumps({"a": 1}) + "\n" + '{"torn')
+    cur = TailCursor()
+    rows = tail_jsonl(str(p), cur, final=True)
+    assert rows == [{"a": 1}]
+    assert cur.torn == 1
+    # torn newline-terminated last line is forgiven too
+    p2 = tmp_path / "s2.jsonl"
+    p2.write_text(json.dumps({"a": 1}) + "\n" + '{"bad\n')
+    cur2 = TailCursor()
+    assert tail_jsonl(str(p2), cur2, final=True) == [{"a": 1}]
+    assert cur2.torn == 1
+
+
+def test_tail_jsonl_midfile_corruption_raises(tmp_path):
+    p = tmp_path / "s.jsonl"
+    p.write_text('{"bad\n' + json.dumps({"a": 1}) + "\n")
+    with pytest.raises(ValueError, match="corruption"):
+        tail_jsonl(str(p), TailCursor(), final=True)
+    # non-final polls refuse it too (rows follow, so it is not a tail)
+    with pytest.raises(ValueError, match="corruption"):
+        tail_jsonl(str(p), TailCursor())
+
+
+def test_replica_stream_rejects_conflicting_replica_stamp(tmp_path):
+    d = _mk_replica_dir(tmp_path, "r0")
+    _append(d / "sensor.jsonl", [_model_row(1, 1, replica="r9")])
+    stream = ReplicaStream(str(d))
+    assert stream.replica == "r0"  # replica- prefix stripped from basename
+    with pytest.raises(ValueError, match="replica"):
+        stream.poll()
+
+
+def test_discover_replica_streams(tmp_path):
+    for name in ("r1", "r0"):
+        d = _mk_replica_dir(tmp_path, name)
+        _append(d / "sensor.jsonl", [_model_row(1, 1)])
+    (tmp_path / "not-a-replica").mkdir()
+    (tmp_path / "fleet_report.json").write_text("{}")
+    streams = discover_replica_streams(str(tmp_path))
+    assert [s.replica for s in streams] == ["r0", "r1"]
+
+
+# --------------------------------------------------------------- aggregation
+
+def test_duplicate_run_ids_across_replicas_rejected(tmp_path):
+    for name in ("r0", "r1"):
+        d = _mk_replica_dir(tmp_path, name)
+        _append(d / "sensor.jsonl",
+                [_model_row(1, 1, run="same-run", replica=name)])
+    agg = FleetAggregator.from_fleet_dir(str(tmp_path))
+    with pytest.raises(ValueError, match="unique fleet-wide"):
+        agg.poll()
+
+
+def test_torn_tail_in_one_replica_tolerated_and_counted(tmp_path):
+    d0 = _mk_replica_dir(tmp_path, "r0")
+    _append(d0 / "sensor.jsonl",
+            [_model_row(50, 50, run="run-0", replica="r0")])
+    d1 = _mk_replica_dir(tmp_path, "r1")
+    _append(d1 / "sensor.jsonl",
+            [_model_row(40, 60, run="run-1", replica="r1")])
+    with open(d1 / "sensor.jsonl", "a") as f:
+        f.write('{"died mid-app')  # replica r1 crashed mid-append
+    agg = FleetAggregator.from_fleet_dir(str(tmp_path))
+    agg.poll(final=True)  # not fatal
+    assert agg.health("r0").torn_lines == 0
+    assert agg.health("r1").torn_lines == 1
+    rep = agg.fleet_report()
+    assert rep["n_replicas"] == 2
+    assert rep["fleet"]["torn_lines"] == 1
+    # both replicas' consumed rows still aggregate
+    assert {r["replica"]: r["run"] for r in rep["per_replica"]} == \
+        {"r0": "run-0", "r1": "run-1"}
+
+
+def test_out_of_order_polls_equivalent_to_one_shot(tmp_path):
+    """Cross-replica arrival order (clock skew, lagging tails) must not
+    change the rollup: replica B fully lands before replica A in one
+    aggregation, interleaved window-by-window in the other."""
+    windows = [
+        (10, 90), (20, 80), (35, 65), (50, 50),
+    ]
+
+    def _write_all(root):
+        for name in ("ra", "rb"):
+            d = _mk_replica_dir(root, name)
+            cum_s = cum_c = 0.0
+            for i, (s, c) in enumerate(windows):
+                cum_s += s
+                cum_c += c
+                _append(d / "sensor.jsonl", [
+                    _model_row(cum_s, cum_c, steps=i + 1,
+                               run=f"run-{name}", replica=name),
+                    _site_row("site0", cum_s, cum_c,
+                              run=f"run-{name}", replica=name),
+                ])
+
+    one_shot = tmp_path / "one"
+    one_shot.mkdir()
+    _write_all(one_shot)
+    agg1 = FleetAggregator.from_fleet_dir(str(one_shot))
+    agg1.poll(final=True)
+
+    skewed = tmp_path / "skewed"
+    skewed.mkdir()
+    da = _mk_replica_dir(skewed, "ra")
+    db = _mk_replica_dir(skewed, "rb")
+    agg2 = FleetAggregator(
+        [ReplicaStream(str(da)), ReplicaStream(str(db))])
+    # replica B lands entirely first; A trickles in one window per poll
+    cum = {"ra": [0.0, 0.0], "rb": [0.0, 0.0]}
+
+    def _one_window(d, name, idx):
+        s, c = windows[idx]
+        cum[name][0] += s
+        cum[name][1] += c
+        _append(d / "sensor.jsonl", [
+            _model_row(cum[name][0], cum[name][1], steps=idx + 1,
+                       run=f"run-{name}", replica=name),
+            _site_row("site0", cum[name][0], cum[name][1],
+                      run=f"run-{name}", replica=name),
+        ])
+
+    for i in range(len(windows)):
+        _one_window(db, "rb", i)
+    agg2.poll()
+    for i in range(len(windows)):
+        _one_window(da, "ra", i)
+        agg2.poll()
+    agg2.poll(final=True)
+
+    assert json.dumps(agg1.fleet_report(), sort_keys=True) == \
+        json.dumps(agg2.fleet_report(), sort_keys=True)
+
+
+def test_single_replica_rollup_bitwise_equals_sensor_report(tmp_path):
+    from repro.sensor.cost_model import sensor_energy
+    from repro.sensor.runner import run_measured_decode
+
+    md = run_measured_decode("qwen3-32b", steps=8, batch=2, correlation=0.9)
+    report = md.report
+    d = _mk_replica_dir(tmp_path, "solo")
+    with events.context(run="run-solo", replica="solo"):
+        report.write_jsonl(str(d / "sensor.jsonl"))
+    agg = FleetAggregator.from_fleet_dir(str(tmp_path))
+    agg.poll(final=True)
+    fleet_rep = agg.fleet_report()
+    assert fleet_rep["n_replicas"] == 1
+    solo = fleet_rep["per_replica"][0]
+    model = report.model
+    # per-replica rollup carries the replica's own model numbers verbatim
+    for key in ("mac_skip_rate", "tile_skip_rate", "weight_byte_skip_rate",
+                "grid_step_skip_rate", "hit_rate"):
+        assert solo[key] == model[key], key
+    # fleet-level rates are RECOMPUTED from summed counters with
+    # build_report's exact formulas — bitwise-equal for one replica
+    f = fleet_rep["fleet"]
+    for key in ("mac_skip_rate", "tile_skip_rate", "weight_byte_skip_rate",
+                "grid_step_skip_rate", "hit_rate"):
+        assert f[key] == model[key], key
+    energy = sensor_energy(report)
+    for key in ("baseline_dynamic_j", "measured_dynamic_j",
+                "saved_dynamic_j", "dynamic_reduction"):
+        assert solo["energy"][key] == energy[key], key
+        assert f["energy"][key] == energy[key], key
+
+
+# -------------------------------------------------------------------- health
+
+def _quarantine_row(site, layer, before, after, *, run="run-a", replica=None):
+    row = {"kind": "decision", "decision_kind": "quarantine",
+           "field": "state", "site": site, "layer": layer,
+           "before": before, "after": after, "step": 12,
+           "schema_version": 4}
+    trace = {"run": run}
+    if replica is not None:
+        trace["replica"] = replica
+    row["trace"] = trace
+    return row
+
+
+def test_replica_health_from_journal_stream(tmp_path):
+    d = _mk_replica_dir(tmp_path, "r0")
+    _append(d / "sensor.jsonl",
+            [_model_row(50, 50, steps=6, trips=2, run="run-0",
+                        replica="r0")])
+    _append(d / "journal.jsonl", [
+        _quarantine_row("mlp_in", 0, "active", "quarantined",
+                        run="run-0", replica="r0"),
+        _quarantine_row("attn_qkv", 1, "active", "quarantined",
+                        run="run-0", replica="r0"),
+        _quarantine_row("attn_qkv", 1, "quarantined", "probation",
+                        run="run-0", replica="r0"),
+        {"kind": "decision", "decision_kind": "quarantine",
+         "field": "stall_windows", "site": "", "layer": None,
+         "before": 0, "after": 1, "step": 18, "schema_version": 4,
+         "trace": {"run": "run-0", "replica": "r0"}},
+    ])
+    agg = FleetAggregator.from_fleet_dir(str(tmp_path))
+    agg.poll(final=True)
+    h = agg.health("r0")
+    assert isinstance(h, ReplicaHealth)
+    assert h.quarantined_lanes == 1       # attn_qkv@1 moved on to probation
+    assert h.sentinel_trips == 2          # from the sensor model row
+    assert h.stall_windows == 1
+    assert h.run == "run-0"
+    assert h.status == "quarantined"
+    assert h.to_dict()["status"] == "quarantined"
+
+
+def test_replica_health_quarantine_gauge_fallback(tmp_path):
+    # journal-less stream (plain serve --obs-dir): the guard gauge carries
+    # the quarantined-lane count instead
+    d = _mk_replica_dir(tmp_path, "r0")
+    _append(d / "sensor.jsonl", [_model_row(10, 90, run="run-0",
+                                            replica="r0")])
+    _append(d / "metrics.jsonl", [
+        {"name": "guard_quarantined_lanes", "labels": {}, "type": "gauge",
+         "value": 3.0, "snap": 1, "trace": {"run": "run-0",
+                                            "replica": "r0"}}])
+    agg = FleetAggregator.from_fleet_dir(str(tmp_path))
+    agg.poll(final=True)
+    assert agg.health("r0").quarantined_lanes == 3
+
+
+# ----------------------------------------------------------------- SLO watch
+
+def _fleet_two(tmp_path):
+    d0 = _mk_replica_dir(tmp_path, "r0")
+    d1 = _mk_replica_dir(tmp_path, "r1")
+    agg = FleetAggregator([ReplicaStream(str(d0)), ReplicaStream(str(d1))])
+    return d0, d1, agg
+
+
+def test_slo_skip_collapse_attributes_injected_replica(tmp_path):
+    d0, d1, agg = _fleet_two(tmp_path)
+    registry = MetricsRegistry()
+    alerts_path = tmp_path / "alerts.jsonl"
+    watcher = SLOWatcher(
+        agg, SLOConfig(collapse_frac=0.6, collapse_consecutive=2),
+        registry=registry, alerts_path=str(alerts_path))
+    # r0 steady at 0.5 windowed skip; r1 matches, then collapses to 0
+    r0_windows = [(50, 50)] * 8
+    r1_windows = [(50, 50)] * 4 + [(0, 100)] * 4
+    cum = {"r0": [0.0, 0.0], "r1": [0.0, 0.0]}
+    for i in range(8):
+        for name, d, (s, c) in (("r0", d0, r0_windows[i]),
+                                ("r1", d1, r1_windows[i])):
+            cum[name][0] += s
+            cum[name][1] += c
+            _append(d / "sensor.jsonl",
+                    [_model_row(cum[name][0], cum[name][1], steps=i + 1,
+                                run=f"run-{name}", replica=name)])
+        agg.poll()
+        watcher.evaluate()
+    kinds = [(a["alert_kind"], a["replica"], a["site"])
+             for a in watcher.alerts]
+    # exactly one collapse alert, replica-level, on r1; r0 stays alert-free
+    assert kinds == [("skip_collapse", "r1", "")]
+    assert agg.health("r0").alerts == 0
+    assert agg.health("r1").alerts == 1
+    a = watcher.alerts[0]
+    assert a["value"] < 0.6 * a["baseline"]
+    assert a["run"] == "run-r1"
+    # counted on the registry, attributed by label
+    assert registry.counter("fleet_alerts_total", alert="skip_collapse",
+                            replica="r1").value == 1.0
+    # persisted journal-style, loadable with torn-tail forgiveness
+    assert load_alerts(str(alerts_path)) == watcher.alerts
+    with open(alerts_path, "a") as f:
+        f.write('{"torn')
+    assert load_alerts(str(alerts_path)) == watcher.alerts
+
+
+def test_slo_collapse_ignores_warmup_and_rising_skip(tmp_path):
+    d0, _, agg = _fleet_two(tmp_path)
+    watcher = SLOWatcher(agg, SLOConfig())
+    # skip RISES from zero (warm-up): baseline below current, and the early
+    # windows are under min_baseline_skip — no alert either way
+    cum = [0.0, 0.0]
+    for i, (s, c) in enumerate([(0, 100), (1, 99), (10, 90), (30, 70),
+                                (50, 50), (50, 50)]):
+        cum[0] += s
+        cum[1] += c
+        _append(d0 / "sensor.jsonl",
+                [_model_row(cum[0], cum[1], steps=i + 1, run="run-r0",
+                            replica="r0")])
+        agg.poll()
+        watcher.evaluate()
+    assert watcher.alerts == []
+
+
+def test_slo_per_site_collapse_names_site(tmp_path):
+    d0, _, agg = _fleet_two(tmp_path)
+    watcher = SLOWatcher(
+        agg, SLOConfig(collapse_frac=0.6, collapse_consecutive=2))
+    model_cum = [0.0, 0.0]
+    site_cum = [0.0, 0.0]
+    # model-level skip stays healthy; ONE site collapses (a quarantined
+    # lane dents the replica total ~1/n_sites but halves its site)
+    for i in range(8):
+        model_cum[0] += 50
+        model_cum[1] += 50
+        s, c = (40, 60) if i < 4 else (0, 100)
+        site_cum[0] += s
+        site_cum[1] += c
+        _append(d0 / "sensor.jsonl", [
+            _model_row(model_cum[0], model_cum[1], steps=i + 1,
+                       run="run-r0", replica="r0"),
+            _site_row("attn_qkv", site_cum[0], site_cum[1],
+                      run="run-r0", replica="r0"),
+        ])
+        agg.poll()
+        watcher.evaluate()
+    assert [(a["alert_kind"], a["replica"], a["site"])
+            for a in watcher.alerts] == [("skip_collapse", "r0",
+                                          "attn_qkv")]
+
+
+def test_slo_quarantine_spike(tmp_path):
+    d0, d1, agg = _fleet_two(tmp_path)
+    watcher = SLOWatcher(agg, SLOConfig())
+    _append(d0 / "journal.jsonl",
+            [_quarantine_row("mlp_in", 0, "active", "quarantined",
+                             run="run-r0", replica="r0")])
+    agg.poll()
+    alerts = watcher.evaluate()
+    assert [(a["alert_kind"], a["replica"]) for a in alerts] == \
+        [("quarantine_spike", "r0")]
+    # no re-alert while the count holds
+    assert watcher.evaluate() == []
+    # recovery then a NEW spike alerts again
+    _append(d0 / "journal.jsonl", [
+        _quarantine_row("mlp_in", 0, "quarantined", "active",
+                        run="run-r0", replica="r0")])
+    agg.poll()
+    assert watcher.evaluate() == []
+    _append(d0 / "journal.jsonl", [
+        _quarantine_row("attn_qkv", 1, "active", "quarantined",
+                        run="run-r0", replica="r0")])
+    agg.poll()
+    assert [a["alert_kind"] for a in watcher.evaluate()] == \
+        ["quarantine_spike"]
+
+
+def test_slo_p95_burn(tmp_path):
+    d0, d1, agg = _fleet_two(tmp_path)
+    watcher = SLOWatcher(agg, SLOConfig(p95_target_s=0.010, p95_min_count=5))
+    spans = [{"name": "serve_step", "span_id": i + 1, "parent_id": 0,
+              "dur_s": 0.002, "trace": {"run": "run-r0", "replica": "r0"}}
+             for i in range(6)]
+    _append(d0 / "spans.jsonl", spans)
+    agg.poll()
+    assert watcher.evaluate() == []  # under target
+    slow = [{"name": "serve_step", "span_id": 10 + i, "parent_id": 0,
+             "dur_s": 0.050, "trace": {"run": "run-r0", "replica": "r0"}}
+            for i in range(10)]
+    _append(d0 / "spans.jsonl", slow)
+    agg.poll()
+    alerts = watcher.evaluate()
+    assert [(a["alert_kind"], a["replica"]) for a in alerts] == \
+        [("p95_burn", "r0")]
+    assert alerts[0]["value"] > 0.010
+    # one alert per episode
+    assert watcher.evaluate() == []
+
+
+# ---------------------------------------------------------- exports and view
+
+def test_export_fleet_metrics_series(tmp_path):
+    from repro.obs.export import parse_prometheus, write_prometheus
+    from repro.obs.fleet import export_fleet_metrics
+
+    d0, d1, agg = _fleet_two(tmp_path)
+    _append(d0 / "sensor.jsonl",
+            [_model_row(50, 50, steps=4, run="run-r0", replica="r0")])
+    _append(d1 / "sensor.jsonl",
+            [_model_row(25, 75, steps=4, run="run-r1", replica="r1")])
+    agg.poll(final=True)
+    reg = MetricsRegistry()
+    export_fleet_metrics(reg, agg)
+    p = tmp_path / "fleet.prom"
+    write_prometheus(str(p), reg)
+    parsed = parse_prometheus(p.read_text())
+    assert parsed["fleet_mac_skip"]['{replica="r0"}'] == pytest.approx(0.5)
+    assert parsed["fleet_mac_skip"]['{replica="r1"}'] == pytest.approx(0.25)
+    assert parsed["fleet_mac_skip"]['{scope="fleet"}'] == \
+        pytest.approx(75 / 200)
+    assert parsed["fleet_replicas"]['{scope="fleet"}'] == 2.0
+
+
+def test_top_fleet_view_and_clear_errors(tmp_path, capsys):
+    from repro.obs.top import main as top_main
+
+    # missing metrics file: clear one-line error, rc 1, no traceback
+    rc = top_main([str(tmp_path / "nope" / "metrics.jsonl"), "--once"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "no such metrics stream" in err
+    # fleet dir with no replica subdirs: same contract
+    rc = top_main([str(tmp_path), "--fleet", "--once"])
+    assert rc == 1
+    assert "no replica obs dirs" in capsys.readouterr().err
+    # a real fleet dir renders per-replica columns
+    for name, skipped in (("r0", 50), ("r1", 25)):
+        d = _mk_replica_dir(tmp_path, name)
+        _append(d / "sensor.jsonl",
+                [_model_row(skipped, 100 - skipped, steps=4,
+                            run=f"run-{name}", replica=name)])
+    rc = top_main([str(tmp_path), "--fleet", "--once"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "r0" in out and "r1" in out and "status" in out
+    assert "run-r0" in out and "run-r1" in out

@@ -206,6 +206,33 @@ def test_prometheus_round_trip(tmp_path):
         pytest.approx(0.002)
 
 
+def test_prometheus_round_trip_hostile_labels(tmp_path):
+    # exposition-format escaping: raw interpolation of these values would
+    # corrupt the textfile (a quote closes the label early, a newline splits
+    # the sample, a brace fools brace-terminated parsers)
+    hostile = {
+        "quote": 'va"lue',
+        "backslash": "back\\slash",
+        "newline": "line1\nline2",
+        "brace": "cl}osing",
+        "comma": "a,b=c",
+        "all": 'x"\\\n}y',
+    }
+    reg = MetricsRegistry()
+    for i, (key, val) in enumerate(sorted(hostile.items())):
+        reg.gauge("hostile_gauge", **{key: val}).set(float(i))
+    p = tmp_path / "metrics.prom"
+    write_prometheus(str(p), reg)
+    parsed = parse_prometheus(p.read_text())
+    from repro.obs.export import _prom_labels, parse_labels
+
+    for i, (key, val) in enumerate(sorted(hostile.items())):
+        label_str = _prom_labels({key: val})
+        assert parsed["hostile_gauge"][label_str] == float(i)
+        # parse_labels is the exact inverse of the writer's label emission
+        assert parse_labels(label_str[1:-1]) == {key: val}
+
+
 def test_parse_prometheus_rejects_untyped_samples():
     with pytest.raises(ValueError, match="TYPE"):
         parse_prometheus("orphan_metric 1.0\n")
