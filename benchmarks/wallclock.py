@@ -218,6 +218,151 @@ def run_sweep(m, k, n, bm, bn, bk, *, skips=SWEEP_SKIPS):
     }
 
 
+def run_shard_sweep(mesh_spec, *, m=8, k=1024, n=512, bm=4, bk=128,
+                    skips=(0.0, 0.5, 0.9), steps=16, warmup=4):
+    """Sharded serve-step sweep: the donated reuse step on a model-sharded
+    mesh vs its unsharded oracle, per skip regime.
+
+    Three engines per operating point, on the SAME input stream:
+
+      oracle  — unsharded, full [K, N] site: the bitwise truth for outputs
+                and (collapsed) counters;
+      local   — unsharded site at N/S output columns: the matched-per-shard-
+                work baseline a shard's latency is compared against;
+      sharded — the S-way engine with its cache device_put on the mesh model
+                axis, stepped through a donated jit exactly like serve.
+
+    Hard assertions are the sharded design's invariants: outputs and shard-
+    summed counters bitwise-equal to the oracle, and zero all-gather/
+    all-to-all touching cache buffers in the compiled step's post-SPMD HLO.
+    `per_shard_latency_ratio` (sharded step time / matched-local step time)
+    is RECORDED per row — on a real mesh it sits near 1.0; on a mocked
+    host mesh the "devices" are host threads sharing the same cores, so the
+    ratio is provenance-stamped ({mesh_shape, backend}) rather than gated.
+    """
+    from functools import partial
+
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core.engine import ReuseEngine
+    from repro.dist.shard import cache_shardings, cache_shape_signatures
+    from repro.launch.mesh import mesh_axes, parse_mesh_spec
+    from repro.roofline.hlo_parse import cache_collective_violations
+    from repro.sensor.counters import COUNTER_SHARD_REDUCE
+
+    mesh = parse_mesh_spec(mesh_spec)
+    S = mesh_axes(mesh)["model_size"]
+    replicated = NamedSharding(mesh, PartitionSpec())
+    tag = kernel_backend.tag()
+
+    def build(n_out, n_shards):
+        eng = ReuseEngine(impl="jnp")
+        eng.register("site", k, n_out, block_m=bm, block_k=bk)
+        if n_shards > 1:
+            eng.shard_sites(n_shards)
+        return eng
+
+    def make_step(eng):
+        @partial(jax.jit, donate_argnums=(2,))
+        def step(x, w, entry):
+            out, entry, _ = eng.apply("site", x, w, None, entry)
+            return out, entry
+
+        return step
+
+    def run_chain(step, xs, w, entry):
+        outs, times = [], []
+        for x in xs:
+            t0 = time.perf_counter()
+            out, entry = step(x, w, entry)
+            jax.block_until_ready(out)
+            times.append((time.perf_counter() - t0) * 1e6)
+            outs.append(np.asarray(out))
+        return outs, entry, float(np.median(times[warmup:]))
+
+    def collapse(sensor):
+        host = jax.device_get(sensor)
+        return {
+            key: (np.asarray(v).sum(axis=0)
+                  if COUNTER_SHARD_REDUCE.get(key, "first") == "sum"
+                  else np.take(np.asarray(v), 0, axis=0))
+            for key, v in host.items()
+        }
+
+    rng = np.random.default_rng(11)
+    w_full = rng.integers(-3, 4, size=(k, n)).astype(np.float32)
+    rows = []
+    for target in skips:
+        # integer-valued stream: each step keeps ~target of its k-tiles
+        # identical to the previous step (those tiles' deltas are zero)
+        xs = [rng.integers(-2, 3, size=(m, k)).astype(np.float32)]
+        for _ in range(steps - 1):
+            nxt = xs[-1].copy()
+            for j in range(k // bk):
+                if rng.random() >= target:
+                    nxt[:, j * bk:(j + 1) * bk] = rng.integers(
+                        -2, 3, size=(m, bk))
+            xs.append(nxt)
+        xs_j = [jnp.asarray(x) for x in xs]
+
+        eng_o = build(n, 1)
+        outs_o, entry_o, _ = run_chain(
+            make_step(eng_o), xs_j, jnp.asarray(w_full),
+            eng_o.init_cache(m)["site"])
+
+        eng_l = build(n // S, 1)
+        _, _, p50_local = run_chain(
+            make_step(eng_l), xs_j, jnp.asarray(w_full[:, : n // S]),
+            eng_l.init_cache(m)["site"])
+
+        eng_s = build(n, S)
+        cache_s = eng_s.init_cache(m)
+        cache_s = jax.device_put(
+            cache_s, cache_shardings(eng_s, mesh, cache_s))
+        entry_s = cache_s["site"]
+        w_dev = jax.device_put(jnp.asarray(w_full), replicated)
+        xs_dev = [jax.device_put(x, replicated) for x in xs_j]
+        step_s = make_step(eng_s)
+
+        def aval(a):
+            return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=a.sharding)
+
+        hlo = step_s.lower(
+            aval(xs_dev[0]), aval(w_dev), jax.tree.map(aval, entry_s)
+        ).compile().as_text()
+        violations = cache_collective_violations(
+            hlo, cache_shape_signatures(entry_s))
+
+        outs_s, entry_s, p50_s = run_chain(step_s, xs_dev, w_dev, entry_s)
+
+        bitwise_out = all(
+            (a == b).all() for a, b in zip(outs_o, outs_s))
+        sen_o = jax.device_get(entry_o["sensor"])
+        sen_s = collapse(entry_s["sensor"])
+        bitwise_counters = all(
+            np.array_equal(np.asarray(sen_o[key]), sen_s[key])
+            for key in sen_s)
+        rows.append({
+            "skip": float(target),
+            "mesh_shape": {str(a): int(s) for a, s in mesh.shape.items()},
+            "n_shards": S,
+            "m": m, "k": k, "n": n, "block_m": bm, "block_k": bk,
+            "sharded_step_us": p50_s,
+            "matched_local_step_us": p50_local,
+            "per_shard_latency_ratio": p50_s / max(p50_local, 1e-9),
+            "bitwise_outputs_vs_oracle": bitwise_out,
+            "bitwise_counters_vs_oracle": bitwise_counters,
+            "hlo_cache_gather_free": not violations,
+            "hlo_violations": violations,
+            **tag,
+        })
+        emit(f"wallclock/shard/{mesh_spec}@{target}", p50_s,
+             f"ratio={rows[-1]['per_shard_latency_ratio']:.2f};"
+             f"bitwise={bitwise_out and bitwise_counters};"
+             f"gather_free={not violations}")
+    return {"mesh_spec": mesh_spec, "rows": rows}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Wall-clock per reuse execution path (BENCH_kernels.json)")
@@ -229,6 +374,14 @@ def main(argv=None):
     ap.add_argument("--no-sweep", action="store_true",
                     help="skip the compiled skip-rate sweep (grid-step "
                     "comparison only)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="also run the sharded serve-step sweep on this mesh "
+                    "(repro.launch.mesh spec, e.g. host:8 — requires "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8); "
+                    "asserts bitwise parity vs the unsharded oracle and a "
+                    "cache-gather-free compiled step, records per-shard "
+                    "latency vs matched-local-work with {mesh_shape, "
+                    "backend} provenance")
     args = ap.parse_args(argv)
 
     if args.tiny:
@@ -348,6 +501,17 @@ def main(argv=None):
               f"direction_agreement={val['direction_agreement']:.2f} "
               f"ok={val['ok']}")
 
+    if args.mesh:
+        shard = run_shard_sweep(args.mesh)
+        doc["shard_sweep"] = shard
+        for r in shard["rows"]:
+            print(f"shard sweep @skip={r['skip']}: "
+                  f"sharded={r['sharded_step_us']:.0f}us "
+                  f"matched-local={r['matched_local_step_us']:.0f}us "
+                  f"ratio={r['per_shard_latency_ratio']:.2f} "
+                  f"bitwise={r['bitwise_outputs_vs_oracle'] and r['bitwise_counters_vs_oracle']} "
+                  f"gather_free={r['hlo_cache_gather_free']}")
+
     n_runs = append_run(args.out, doc)
     print(f"skip_rate={skip_rate:.2f} budget={budget}/{gk} "
           f"ragged_vs_kernel_speedup={ragged_speedup:.2f}x -> {args.out} "
@@ -367,6 +531,17 @@ def main(argv=None):
         assert doc["sweep"]["roofline"]["ok"], (
             "compiled sweep disagrees with the roofline kernel work model "
             f"beyond tolerance: {doc['sweep']['roofline']}")
+    if "shard_sweep" in doc:
+        for r in doc["shard_sweep"]["rows"]:
+            assert r["bitwise_outputs_vs_oracle"], (
+                f"sharded step @skip={r['skip']} outputs diverged from the "
+                "unsharded oracle")
+            assert r["bitwise_counters_vs_oracle"], (
+                f"sharded step @skip={r['skip']} shard-summed counters "
+                "diverged from the unsharded oracle")
+            assert r["hlo_cache_gather_free"], (
+                f"sharded step @skip={r['skip']} gathers cache state: "
+                f"{r['hlo_violations']}")
     return doc
 
 

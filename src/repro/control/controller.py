@@ -34,6 +34,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 from repro.control.admit import AdmissionPredictor
 from repro.control.budget import adapt_budget
 from repro.control.report import ControlReport, Decision, DecisionJournal
@@ -131,6 +133,12 @@ class Controller:
         self.latency = latency  # obs LatencyTable or None (constant pricing)
         self.reports: list[ControlReport] = []
         self._snaps: dict[str, dict] = {}
+        # per-site (skipped_shard, computed_shard) cumulative lanes from the
+        # engine's last ctrl snapshot — diffed per interval for the journal's
+        # per-shard skip-rate rows (no extra device_get: the lanes ride the
+        # snapshot the refresh already pulled)
+        self._shard_snaps: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        self._shard_rates: dict[tuple[str, int], float] = {}
         self._clean_windows: dict[str, int] = {}  # per-site fallback-free run
         # per-site budget value observed to overflow (set on widen); units
         # are K-blocks of the block_k the widen happened at
@@ -172,8 +180,14 @@ class Controller:
             decisions.extend(guard_report.decisions)
             frozen = guard_report.frozen_sites
 
+        shards = getattr(engine, "shards", None) or {}
+        stacking = getattr(engine, "stacking", None) or {}
         for name, spec in list(engine.sites.items()):
-            cur = snapshot_entry(cache[name])
+            cur = snapshot_entry(
+                cache[name],
+                shard_axis=((1 if stacking.get(name, 0) else 0)
+                            if name in shards else None),
+            )
             if cur is None:
                 continue
             if name in frozen:
@@ -372,6 +386,46 @@ class Controller:
                            f"sim_ema {ev['sim_ema']:.2f} (ctrl-array write, "
                            "no retrace)",
                 ))
+
+        # -- per-shard skip truth from the windowed cross-mesh reduce. The
+        # cumulative skipped_shard/computed_shard lanes ([S]) ride the ctrl
+        # snapshot the refresh just pulled (engine.last_snapshot), so this
+        # costs zero extra transfers; each shard whose windowed rate moved
+        # journals ONE kind="shard" observation row — per-shard skip rates
+        # alongside the single global knob trajectory, as the mesh design
+        # requires. These rows move no knob (replay chains, applies nothing).
+        last_snap = getattr(engine, "last_snapshot", None)
+        if windows and shards and last_snap:
+            for name in sorted(shards):
+                if name not in windows:
+                    continue
+                s = last_snap.get(name, {})
+                sk, co = s.get("skipped_shard"), s.get("computed_shard")
+                if sk is None or co is None:
+                    continue
+                sk = np.asarray(sk, np.int64)
+                co = np.asarray(co, np.int64)
+                prev_lanes = self._shard_snaps.get(name)
+                self._shard_snaps[name] = (sk, co)
+                if prev_lanes is None:
+                    continue  # first sight: window starts now
+                d_sk, d_co = sk - prev_lanes[0], co - prev_lanes[1]
+                for sh in range(sk.shape[0]):
+                    tot = float(d_sk[sh] + d_co[sh])
+                    if tot <= 0:
+                        continue
+                    rate = round(float(d_sk[sh]) / tot, 6)
+                    before = self._shard_rates.get((name, sh))
+                    if before == rate:
+                        continue
+                    self._shard_rates[(name, sh)] = rate
+                    decisions.append(Decision(
+                        step=step, site=name, kind="shard", field="skip_rate",
+                        before=before, after=rate, shard=sh,
+                        reason=f"windowed cross-mesh reduce: "
+                               f"{int(d_sk[sh])}/{int(tot)} owned tiles "
+                               f"skipped on shard {sh}",
+                    ))
 
         # -- loop 3: admission predictor drift, journaled
         admission = None

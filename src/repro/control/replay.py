@@ -31,7 +31,10 @@ from repro.core.policy import mode_name  # noqa: F401  (re-export convenience)
 # "retune" rows track the policy-table entry while "budget"/"exec" rows track
 # the installed spec — two stores that legitimately interleave (set_budget
 # syncs the table, pins release), so chains are only verified within a kind.
-_KnobKey = tuple[str, str, str, Any]  # (site, kind, field, layer)
+# Journal v5 adds the shard scope: per-shard observation rows (kind="shard")
+# chain independently per shard — a forged/misattributed shard id breaks its
+# chain's before/after continuity and surfaces as a mismatch.
+_KnobKey = tuple[str, str, str, Any, Any]  # (site, kind, field, layer, shard)
 
 # (kind, field) chains with more than one writer: the budget adapter syncs
 # the retuner's table entry between intervals, so the retune-side
@@ -50,6 +53,8 @@ class ReplayResult:
     mismatches: list[dict[str, Any]]
     # per-layer decisions seen (the stacked-site control surface)
     n_layer_scoped: int
+    # per-shard observation rows seen (the sharded-mesh control surface)
+    n_shard_scoped: int = 0
 
     @property
     def ok(self) -> bool:
@@ -60,21 +65,25 @@ class ReplayResult:
             f"replayed {self.n_decisions} decisions over "
             f"{self.n_intervals} intervals ({self.n_rows} rows); "
             f"{self.n_layer_scoped} layer-scoped; "
+            f"{self.n_shard_scoped} shard-scoped; "
             f"{len(self.mismatches)} trajectory mismatches",
         ]
         for m in self.mismatches:
             lines.append(
                 f"  MISMATCH {m['kind']}:{m['site']}.{m['field']}"
                 + (f"@{m['layer']}" if m.get("layer") is not None else "")
+                + (f"#s{m['shard']}" if m.get("shard") is not None else "")
                 + f": journal before={m['before']!r} but replayed "
                 f"state={m['replayed']!r} (interval {m['interval']})"
             )
         by_site: dict[str, list[str]] = {}
-        for (site, kind, field, layer), val in sorted(
+        for (site, kind, field, layer, shard), val in sorted(
             self.final_state.items(),
             key=lambda kv: tuple(str(p) for p in kv[0]),
         ):
             where = f"@{layer}" if layer is not None else ""
+            if shard is not None:
+                where = f"{where}#s{shard}"
             by_site.setdefault(site or "<model>", []).append(
                 f"{kind}:{field}{where}={val}")
         for site, knobs in sorted(by_site.items()):
@@ -87,7 +96,7 @@ def replay_rows(rows: list[dict[str, Any]]) -> ReplayResult:
     decision's `before` against the reproduced trajectory."""
     state: dict[_KnobKey, Any] = {}
     mismatches: list[dict[str, Any]] = []
-    n_dec = n_int = n_layer = 0
+    n_dec = n_int = n_layer = n_shard = 0
     for row in rows:
         kind = row.get("kind")
         if kind == "interval":
@@ -99,13 +108,16 @@ def replay_rows(rows: list[dict[str, Any]]) -> ReplayResult:
         layer = row.get("layer")
         if layer is not None:
             n_layer += 1
+        shard = row.get("shard")
+        if shard is not None:
+            n_shard += 1
         kind = row.get("decision_kind", "")
         field = row.get("field", "")
-        key = (row.get("site", ""), kind, field, layer)
+        key = (row.get("site", ""), kind, field, layer, shard)
         if (key in state and state[key] != row.get("before")
                 and (kind, field) not in _MULTI_WRITER):
             mismatches.append(dict(
-                site=key[0], kind=kind, field=field, layer=layer,
+                site=key[0], kind=kind, field=field, layer=layer, shard=shard,
                 before=row.get("before"), replayed=state[key],
                 interval=row.get("interval"),
             ))
@@ -113,6 +125,7 @@ def replay_rows(rows: list[dict[str, Any]]) -> ReplayResult:
     return ReplayResult(
         n_rows=len(rows), n_decisions=n_dec, n_intervals=n_int,
         final_state=state, mismatches=mismatches, n_layer_scoped=n_layer,
+        n_shard_scoped=n_shard,
     )
 
 
@@ -152,6 +165,11 @@ def apply_to_engine(rows: list[dict[str, Any]], engine, cache) -> dict[str, Any]
             engine.sites[site] = dataclasses.replace(
                 spec, exec_path=after, max_active_k=budget,
             )
+        elif kind == "shard":
+            # per-shard observation rows move no engine knob (skip decisions
+            # are shard-LOCAL consequences of the global operating point);
+            # replay chains them in replay_rows and applies nothing here
+            pass
         elif kind == "quarantine" and field == "state":
             # containment transitions: entering quarantine pins the lane to
             # basic (the breaker's ctrl write); leaving it does NOT force

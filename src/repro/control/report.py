@@ -29,8 +29,15 @@ from typing import Any
 #       straggler-watchdog events, site=""), and `load_journal` tolerates
 #       exactly one torn final row (crash mid-append) by emitting a
 #       kind="torn_tail" marker instead of raising
-CONTROL_JOURNAL_SCHEMA_VERSION = 4
-LOADABLE_JOURNAL_VERSIONS = (1, 2, 3, 4)
+#   5 — decision rows carry `shard` (model-axis shard the decision is scoped
+#       to; null = mesh-global, which every pre-sharding decision is — v1-v4
+#       rows load with shard=None) and the "shard" decision kind records
+#       per-shard observations from the windowed cross-mesh counter reduce
+#       (field="skip_rate": one row per shard whose window moved; the GLOBAL
+#       controller trajectory stays shard=None, so a journal shows per-shard
+#       skip truth alongside ONE global knob stream)
+CONTROL_JOURNAL_SCHEMA_VERSION = 5
+LOADABLE_JOURNAL_VERSIONS = (1, 2, 3, 4, 5)
 
 # Decision kinds: which feedback loop acted.
 #   "retune"  — online refit of a SiteTunables knob from windowed counters
@@ -46,8 +53,12 @@ LOADABLE_JOURNAL_VERSIONS = (1, 2, 3, 4)
 #               to basic/dense, a lockout drained into probation, or a lane
 #               re-admitted after clean windows (field="state"); straggler
 #               stalls journal as field="stall_windows" with site=""
+#   "shard"   — per-shard observation from the once-per-window cross-mesh
+#               counter reduce (field="skip_rate"; `shard` set). Moves no
+#               knob — replay chains it for audit but applies nothing.
 DECISION_KINDS = (
-    "retune", "budget", "mode", "exec", "admit", "restore", "quarantine")
+    "retune", "budget", "mode", "exec", "admit", "restore", "quarantine",
+    "shard")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +76,10 @@ class Decision:
     # writes: "site@layer" retune rows, per-layer mode flips). None =
     # site-granular (spec-level knobs, unstacked sites).
     layer: int | None = None
+    # Which model-axis shard the decision is scoped to. None = mesh-global:
+    # every knob the controller moves is global (tunables/modes/budgets write
+    # replicated ctrl lanes), so only kind="shard" observation rows set this.
+    shard: int | None = None
 
     def __post_init__(self) -> None:
         if self.kind not in DECISION_KINDS:
@@ -101,6 +116,8 @@ class ControlReport:
             where = d.site or "<model>"
             if d.layer is not None:
                 where = f"{where}@{d.layer}"
+            if d.shard is not None:
+                where = f"{where}#s{d.shard}"
             lines.append(
                 f"  {d.kind:6s} {where:24s} "
                 f"{d.field}: {d.before} -> {d.after}  ({d.reason})"
@@ -202,7 +219,10 @@ def load_journal(path: str) -> list[dict[str, Any]]:
             raise ValueError(
                 f"{path}:{lineno}: journal schema_version {ver!r} not in "
                 f"{LOADABLE_JOURNAL_VERSIONS}")
-        if "layer" not in row and row.get("kind") == "decision":
-            row["layer"] = None  # v1 decisions predate per-layer lanes
+        if row.get("kind") == "decision":
+            if "layer" not in row:
+                row["layer"] = None  # v1 decisions predate per-layer lanes
+            if "shard" not in row:
+                row["shard"] = None  # v1-v4 decisions predate the mesh
         rows.append(row)
     return rows

@@ -35,16 +35,27 @@ _COUNTER_KEYS = (
 )
 
 
-def snapshot_entry(entry: dict) -> dict | None:
+def snapshot_entry(entry: dict, shard_axis: int | None = None) -> dict | None:
     """Host-side snapshot of one cache entry's cumulative counters, summed
     over any leading layer dimension (one small device→host transfer).
 
     For STACKED sites the snapshot additionally keeps the un-summed per-layer
     counter arrays under ``"layers"`` — the per-layer retune loop diffs those
-    to give each layer of a stack its own windowed operating point."""
+    to give each layer of a stack its own windowed operating point.
+
+    `shard_axis` (model-sharded entries) names the shard axis position; the
+    entry is collapsed class-aware first (ownership-partition lanes sum,
+    replicated lanes take shard 0 — sensor.aggregate._collapse_shard_entry),
+    so everything below keeps reading global per-layer counters and the
+    retuner's windowed deltas stay identical to an unsharded run's."""
     sensor = entry.get("sensor")
     if sensor is None:
         return None
+    if shard_axis is not None:
+        from repro.sensor.aggregate import _collapse_shard_entry
+
+        entry = _collapse_shard_entry(entry, shard_axis)
+        sensor = entry["sensor"]
 
     def total(key: str) -> float:
         return float(np.sum(np.asarray(sensor[key])))

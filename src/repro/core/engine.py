@@ -28,6 +28,7 @@ with the rest of the serving state.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -44,6 +45,7 @@ from repro.core.policy import (
 )
 from repro.core.reuse_cache import ReuseSiteSpec, init_site_cache
 from repro.core.reuse_linear import ReuseStats, reuse_linear
+from repro.sensor.counters import ShardCtx
 
 
 def clamp_budget(max_active_k: int | None, gk: int) -> int:
@@ -55,8 +57,36 @@ def clamp_budget(max_active_k: int | None, gk: int) -> int:
     return _clamp(max_active_k, gk)
 
 
-@jax.jit
-def _ctrl_snapshot_device(cache: dict[str, Any]) -> dict[str, Any]:
+def _combine_shard_sentinels(
+    lanes: dict[str, jax.Array], count: int
+) -> dict[str, jax.Array]:
+    """Collapse vmapped sentinel lanes [S, L] → [L], preserving each lane's
+    detection semantics: disjoint counts SUM (prev_out columns and the
+    counter ownership partition split across shards), replicated health
+    flags MAX (a single corrupt shard must still trip), and the ctrl range
+    bitmask ORs (max would drop bits when different shards fail different
+    range checks)."""
+    out: dict[str, jax.Array] = {
+        "bad_out": jnp.sum(lanes["bad_out"], axis=0),
+        "bad_sim": jnp.max(lanes["bad_sim"], axis=0),
+        "steps_l": lanes["steps_l"][0],
+    }
+    if "ctrl_bad" in lanes:
+        out["ctrl_bad"] = functools.reduce(
+            jnp.bitwise_or, [lanes["ctrl_bad"][i] for i in range(count)]
+        )
+        out["quarantine"] = jnp.max(lanes["quarantine"], axis=0)
+    if "skipped_l" in lanes:
+        out["skipped_l"] = jnp.sum(lanes["skipped_l"], axis=0)
+        out["computed_l"] = jnp.sum(lanes["computed_l"], axis=0)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("shard_axes",))
+def _ctrl_snapshot_device(
+    cache: dict[str, Any],
+    shard_axes: tuple[tuple[str, int, int], ...] = (),
+) -> dict[str, Any]:
     """ONE traced pass over the whole cache pytree gathering everything the
     host-side policy pass reads: per-layer sim_ema means, the ctrl lanes, and
     the sensor tile sums. Before this existed, refresh_modes/refresh_exec_
@@ -66,27 +96,67 @@ def _ctrl_snapshot_device(cache: dict[str, Any]) -> dict[str, Any]:
 
     The guard plane's array sentinels (non-finite flags, ctrl-lane range
     bitmasks, per-layer counter lanes — repro.guard.sentinel) ride the same
-    traced pass, so fault DETECTION costs zero extra device→host syncs."""
+    traced pass, so fault DETECTION costs zero extra device→host syncs.
+
+    `shard_axes` (static) lists the model-sharded sites as
+    (name, shard_axis, n_shards). For those entries the snapshot is ALSO the
+    once-per-control-window cross-mesh sensor reduce: the sums below run over
+    the shard axis of mesh-placed counter arrays, so SPMD partitioning lowers
+    them to the one all-reduce per window the design allows (no hot-path
+    collectives), and the host still pulls one tiny replicated pytree.
+    Replicated ctrl/sim lanes collapse to shard lane 0; per-shard skip lanes
+    (`skipped_shard`/`computed_shard`, [S]) ride along for the controller's
+    per-shard journal entries at zero extra transfers."""
     from repro.guard.sentinel import sentinel_lanes
 
+    shard_of = {name: (ax, count) for name, ax, count in shard_axes}
     snap: dict[str, Any] = {}
     for name, entry in cache.items():
         s: dict[str, jax.Array] = {}
+        sh = shard_of.get(name)
         ctrl = entry.get("ctrl")
         if ctrl is not None:
             sim = entry["sim_ema"]
             sim_l = sim if sim.ndim == 0 else jnp.mean(sim, axis=-1)
-            s["sim_l"] = jnp.atleast_1d(sim_l).astype(jnp.float32)
-            s["mode_id"] = jnp.atleast_1d(ctrl["mode_id"])
-            s["sim_threshold"] = jnp.atleast_1d(ctrl["sim_threshold"])
-            s["min_work"] = jnp.atleast_1d(ctrl["min_work"])
-            s["cooldown"] = jnp.atleast_1d(ctrl["cooldown"])
+            if sh is not None:  # replicated across shards → lane 0
+                ax = sh[0]
+                sim_l = jnp.take(sim_l, 0, axis=ax)
+                s["sim_l"] = jnp.atleast_1d(sim_l).astype(jnp.float32)
+                s["mode_id"] = jnp.atleast_1d(
+                    jnp.take(ctrl["mode_id"], 0, axis=ax))
+                s["sim_threshold"] = jnp.atleast_1d(
+                    jnp.take(ctrl["sim_threshold"], 0, axis=ax))
+                s["min_work"] = jnp.atleast_1d(
+                    jnp.take(ctrl["min_work"], 0, axis=ax))
+                s["cooldown"] = jnp.atleast_1d(
+                    jnp.take(ctrl["cooldown"], 0, axis=ax))
+            else:
+                s["sim_l"] = jnp.atleast_1d(sim_l).astype(jnp.float32)
+                s["mode_id"] = jnp.atleast_1d(ctrl["mode_id"])
+                s["sim_threshold"] = jnp.atleast_1d(ctrl["sim_threshold"])
+                s["min_work"] = jnp.atleast_1d(ctrl["min_work"])
+                s["cooldown"] = jnp.atleast_1d(ctrl["cooldown"])
         sensor = entry.get("sensor")
         if sensor is not None:
+            # ownership partition ⇒ the plain sum over ALL axes (layers AND
+            # shards) IS the global count — this is the mesh reduce.
             s["skipped"] = jnp.sum(sensor["skipped_tiles"])
             s["computed"] = jnp.sum(sensor["computed_tiles"])
+            if sh is not None:
+                ax = sh[0]
+                lane_axes = tuple(
+                    i for i in range(sensor["skipped_tiles"].ndim) if i != ax)
+                s["skipped_shard"] = jnp.sum(
+                    sensor["skipped_tiles"], axis=lane_axes)
+                s["computed_shard"] = jnp.sum(
+                    sensor["computed_tiles"], axis=lane_axes)
         if ctrl is not None:
-            s.update(sentinel_lanes(entry))
+            if sh is None:
+                s.update(sentinel_lanes(entry))
+            else:
+                ax, count = sh
+                lanes = jax.vmap(sentinel_lanes, in_axes=ax)(entry)
+                s.update(_combine_shard_sentinels(lanes, count))
         snap[name] = s
     return snap
 
@@ -106,6 +176,18 @@ class ReuseEngine:
     # ({site, layer, before, after, sim_ema}; layer None = unstacked) — the
     # controller journals these; they do NOT require a retrace
     last_mode_events: list[dict] = dataclasses.field(default_factory=list)
+    # model-axis shard count per site (empty = unsharded engine). Set by
+    # shard_sites() BEFORE init_cache; sharded entries carry the shard axis
+    # inside the layer axis ([S, ...] unstacked, [L, S, ...] stacked).
+    shards: dict[str, int] = dataclasses.field(default_factory=dict)
+    # interconnect accounting (bytes, cumulative): the per-window cross-mesh
+    # counter reduce riding the ctrl snapshot, and sharded ctrl-lane write
+    # fan-out. sensor.cost_model prices these into E_ICI energy.
+    ici_reduce_bytes: float = 0.0
+    ici_write_bytes: float = 0.0
+    # the most recent ctrl_snapshot (host pytree) — the controller reads the
+    # per-shard skip lanes from here instead of paying a second device_get
+    last_snapshot: dict[str, Any] | None = None
 
     def register(
         self,
@@ -143,10 +225,43 @@ class ReuseEngine:
         self.exec_cooldown[name] = 0
         return spec
 
+    def shard_sites(self, n_shards: int) -> dict[str, int]:
+        """Plan an N-way model-axis split of every registered site — the
+        sharded-serving entry point, called BEFORE init_cache. Validates
+        divisibility up front (a clear error beats a reshape failure deep in
+        the traced step) and records the plan in `self.shards`; init_cache
+        then expands every entry with the shard axis, apply() dispatches
+        through the vmap-over-shards path, and the ctrl snapshot collapses
+        shard lanes back out. n_shards <= 1 clears the plan (unsharded)."""
+        from repro.dist.shard import validate_shardable
+
+        if n_shards <= 1:
+            self.shards = {}
+            return self.shards
+        for spec in self.sites.values():
+            validate_shardable(spec, n_shards)
+        self.shards = {name: n_shards for name in self.sites}
+        return self.shards
+
     def init_cache(self, batch: int) -> dict[str, Any]:
         cache: dict[str, Any] = {}
         for name, spec in self.sites.items():
+            n_shards = self.shards.get(name, 0)
+            if n_shards:
+                from repro.dist.shard import plan_local_spec
+
+                spec = plan_local_spec(spec, n_shards)
             entry = init_site_cache(spec, batch, self.policy.resolve(name))
+            if n_shards:
+                # shard axis first (innermost), layer axis broadcast below
+                # wraps it: [S, ...] unstacked → [L, S, ...] stacked. Initial
+                # state is identical across shards (prev_out is zeros at the
+                # local N), so a broadcast IS the sharded init.
+                entry = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x, (n_shards, *x.shape)).copy(),
+                    entry,
+                )
             n_layers = self.stacking[name]
             if n_layers:
                 entry = jax.tree.map(
@@ -157,12 +272,14 @@ class ReuseEngine:
                 # lanes here; spec-level knobs stay site-granular
                 ts = [self.policy.resolve(name, layer=layer)
                       for layer in range(n_layers)]
+                thr = jnp.asarray([t.sim_threshold for t in ts], jnp.float32)
+                mw = jnp.asarray([t.min_work_flops for t in ts], jnp.float32)
+                if n_shards:  # per-layer lanes replicate across shards
+                    thr = jnp.broadcast_to(
+                        thr[:, None], (n_layers, n_shards))
+                    mw = jnp.broadcast_to(mw[:, None], (n_layers, n_shards))
                 entry["ctrl"] = dict(
-                    entry["ctrl"],
-                    sim_threshold=jnp.asarray(
-                        [t.sim_threshold for t in ts], jnp.float32),
-                    min_work=jnp.asarray(
-                        [t.min_work_flops for t in ts], jnp.float32),
+                    entry["ctrl"], sim_threshold=thr, min_work=mw,
                 )
             cache[name] = entry
         return cache
@@ -182,9 +299,74 @@ class ReuseEngine:
         # named_scope labels the site in device traces/HLO, so a profiler
         # window (serve --profile-dir) attributes device time per reuse site.
         with jax.named_scope(f"reuse_site:{name}"):
+            if self.shards.get(name):
+                return self._apply_sharded(name, x, w, b, cache_entry, mode)
             return reuse_linear(
                 x, w, b, cache_entry, spec, mode=mode, impl=self.impl
             )
+
+    def _apply_sharded(
+        self,
+        name: str,
+        x: jax.Array,
+        w: jax.Array,
+        b: jax.Array | None,
+        entry: dict[str, jax.Array],
+        mode: str | None,
+    ) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
+        """One sharded site call: vmap the shard-local evaluation over the
+        entry's shard axis. The weight panel splits column-wise to match
+        (`w[:, s·nl:(s+1)·nl]` per shard); x is replicated in closure; every
+        cache leaf carries the shard axis uniformly, so `in_axes=0` maps the
+        whole entry. NOTHING here crosses shards — no gather, no reduce —
+        which is the hot-path invariant the HLO check pins.
+
+        kernelMode dispatch lifts OUTSIDE the vmap: `lax.cond` under vmap
+        lowers to a select that executes BOTH branches on every shard, so the
+        branch is taken once on the (replicated) layer ctrl lane and each arm
+        vmaps a statically-moded evaluation."""
+        spec = self.sites[name]
+        n_shards = self.shards[name]
+        nl = spec.out_features // n_shards
+        k = w.shape[0]
+        lead = x.shape[:-1]
+        local = dataclasses.replace(spec, out_features=nl)
+        gn_total = -(-spec.out_features // spec.block_n)
+        ws = jnp.moveaxis(w.reshape(k, n_shards, nl), 1, 0)   # [S, K, nl]
+        bs = None if b is None else b.reshape(n_shards, nl)
+        idx = jnp.arange(n_shards, dtype=jnp.int32)
+
+        def _sharded_eval(static_mode: str):
+            def one(i, wl, bl, el):
+                shard = ShardCtx(index=i, count=n_shards,
+                                 n_total=spec.out_features,
+                                 gn_total=gn_total)
+                return reuse_linear(
+                    x, wl, bl, el, local, mode=static_mode,
+                    impl=self.impl, shard=shard,
+                )
+
+            axes = (0, 0, None if b is None else 0, 0)
+            return lambda: jax.vmap(one, in_axes=axes)(idx, ws, bs, entry)
+
+        if mode is None:
+            ctrl = entry.get("ctrl")
+            if ctrl is None:
+                raise ValueError(
+                    f"site {name!r}: sharded mode=None needs a ctrl block "
+                    "in the cache entry (engine.init_cache creates it)"
+                )
+            # the layer's mode lane, replicated across shards → lane 0
+            pred = jnp.reshape(ctrl["mode_id"], (-1,))[0] > 0
+            out_s, new_entry, stats_s = jax.lax.cond(
+                pred, _sharded_eval("reuse"), _sharded_eval("basic")
+            )
+        else:
+            out_s, new_entry, stats_s = _sharded_eval(mode)()
+        # [S, *lead, nl] → [*lead, S, nl] → [*lead, N]
+        out = jnp.moveaxis(out_s, 0, -2).reshape(*lead, spec.out_features)
+        stats = jax.tree.map(lambda a: a[0], stats_s)  # replicated per shard
+        return out, new_entry, stats
 
     # ------------------------------------------------ ctrl-block interrogation
 
@@ -193,13 +375,24 @@ class ReuseEngine:
         """A site's per-layer mode ids as a 1-d host array ([1] unstacked)."""
         return np.atleast_1d(np.asarray(entry["ctrl"]["mode_id"]))
 
+    def _mode_ids(self, cache: dict[str, Any], name: str) -> np.ndarray:
+        """Per-layer mode ids with the shard lane collapsed (mode lanes are
+        replicated across model shards, so lane 0 is the site truth)."""
+        ids = np.asarray(cache[name]["ctrl"]["mode_id"])
+        if self.shards.get(name, 0):
+            from repro.dist.shard import shard_axis_of
+
+            ids = np.take(ids, 0, axis=shard_axis_of(
+                self.stacking.get(name, 0)))
+        return np.atleast_1d(ids)
+
     def layer_modes(self, cache: dict[str, Any], name: str) -> list[str]:
-        return [mode_name(m) for m in self.entry_mode_ids(cache[name])]
+        return [mode_name(m) for m in self._mode_ids(cache, name)]
 
     def site_mode(self, cache: dict[str, Any], name: str) -> str:
         """One site's kernelMode summary: "reuse"/"basic" when uniform over
         layers, "mixed" when a stack settled distinct per-layer modes."""
-        ids = self.entry_mode_ids(cache[name])
+        ids = self._mode_ids(cache, name)
         if np.all(ids == ids[0]):
             return mode_name(ids[0])
         return "mixed"
@@ -301,6 +494,15 @@ class ReuseEngine:
             t = self.policy.resolve(name)
             thr = jnp.asarray(t.sim_threshold, jnp.float32)
             mw = jnp.asarray(t.min_work_flops, jnp.float32)
+        n_shards = self.shards.get(name, 0)
+        if n_shards:  # replicate tunable lanes across the shard axis
+            if n_layers:
+                thr = jnp.broadcast_to(thr[:, None], (n_layers, n_shards))
+                mw = jnp.broadcast_to(mw[:, None], (n_layers, n_shards))
+            else:
+                thr = jnp.broadcast_to(thr, (n_shards,))
+                mw = jnp.broadcast_to(mw, (n_shards,))
+            self.ici_write_bytes += float(thr.size + mw.size) * 4
         cache[name] = dict(
             entry, ctrl=dict(entry["ctrl"], sim_threshold=thr, min_work=mw)
         )
@@ -328,11 +530,34 @@ class ReuseEngine:
 
     # -------------------------------------------------- host-side policy pass
 
+    def _shard_axes_static(self) -> tuple[tuple[str, int, int], ...]:
+        """Hashable shard layout for the jitted snapshot's static arg."""
+        from repro.dist.shard import shard_axis_of
+
+        return tuple(sorted(
+            (name, shard_axis_of(self.stacking.get(name, 0)), count)
+            for name, count in self.shards.items()
+        ))
+
     def ctrl_snapshot(self, cache: dict[str, Any]) -> dict[str, Any]:
         """Pull the policy pass's inputs for ALL sites in one device round
         trip: the traced `_ctrl_snapshot_device` reduces on device, a single
-        `jax.device_get` materializes the result as host numpy."""
-        return jax.device_get(_ctrl_snapshot_device(cache))
+        `jax.device_get` materializes the result as host numpy.
+
+        On a sharded engine this snapshot IS the once-per-window cross-mesh
+        sensor reduce; the payload it moves is metered into
+        `ici_reduce_bytes` so the cost model can price it as E_ICI."""
+        snap_dev = _ctrl_snapshot_device(
+            cache, shard_axes=self._shard_axes_static())
+        if self.shards:
+            self.ici_reduce_bytes += float(sum(
+                leaf.size * leaf.dtype.itemsize
+                for name in self.shards
+                for leaf in jax.tree.leaves(snap_dev.get(name, {}))
+            ))
+        snap = jax.device_get(snap_dev)
+        self.last_snapshot = snap
+        return snap
 
     def refresh_modes(self, cache: dict[str, Any]) -> dict[str, str]:
         """Host-side policy pass: one BATCHED per-layer decide per site.
@@ -410,12 +635,24 @@ class ReuseEngine:
                     int(hyst[applied].max()),
                 )
             shape = jnp.shape(ctrl["mode_id"])
+            if name in self.shards:
+                # decided lanes are per-layer [L]; the ctrl block is
+                # [L, S] / [S] — replicate the decision across shards
+                # (every shard runs the same layer mode) and meter the
+                # sharded write fan-out for the E_ICI rollup
+                stacked_w = self.stacking.get(name, 0) > 0
+                new_mode_w = np.broadcast_to(
+                    new_mode[:, None] if stacked_w else new_mode, shape)
+                new_cd_w = np.broadcast_to(
+                    new_cd[:, None] if stacked_w else new_cd, shape)
+                self.ici_write_bytes += float(np.prod(shape)) * (1 + 4)
+            else:
+                new_mode_w = new_mode.reshape(shape)
+                new_cd_w = new_cd.reshape(shape)
             entry = dict(entry, ctrl=dict(
                 ctrl,
-                mode_id=jnp.asarray(
-                    new_mode.reshape(shape), jnp.int8),
-                cooldown=jnp.asarray(
-                    new_cd.reshape(shape), jnp.int32),
+                mode_id=jnp.asarray(new_mode_w, jnp.int8),
+                cooldown=jnp.asarray(new_cd_w, jnp.int32),
             ))
             cache[name] = entry
         return self.refresh_exec_paths(cache, snapshot=snap)

@@ -50,7 +50,12 @@ from repro.core.reuse_cache import ReuseSiteSpec, resolve_exec_path
 from repro.core.similarity import ema_update, row_code_similarity
 from repro.kernels import ops
 from repro.quant import dequantize_int8, quantize_int8
-from repro.sensor.counters import update_on_basic, update_on_reuse
+from repro.sensor.counters import (
+    ShardCtx,
+    owned_panel_count,
+    update_on_basic,
+    update_on_reuse,
+)
 
 
 class ReuseStats(NamedTuple):
@@ -93,6 +98,7 @@ def _encode(
 def _basic_eval(
     xm: jax.Array, w: jax.Array, cache: dict[str, jax.Array],
     spec: ReuseSiteSpec, ema_decay: float,
+    shard: ShardCtx | None = None,
 ):
     """ReuseSensor+ReuseOFF: the generated basic kernel (Fig. 7-A) — plain
     quantized GEMM, no delta/cache bookkeeping beyond refreshing state."""
@@ -119,6 +125,7 @@ def _basic_eval(
             gn=-(-n // spec.block_n),
             block_m=spec.block_m, block_k=spec.block_k,
             w_itemsize=w.dtype.itemsize,
+            shard=shard,
         )
     stats = ReuseStats(similarity=sim,
                        skip_fraction=jnp.zeros((), jnp.float32))
@@ -128,14 +135,23 @@ def _basic_eval(
 def _reuse_eval(
     xm: jax.Array, w: jax.Array, cache: dict[str, jax.Array],
     spec: ReuseSiteSpec, impl: str, ema_decay: float,
+    shard: ShardCtx | None = None,
 ):
     """ReuseSensor+ReuseON: delta-encode against the previous evaluation and
-    run the ΔW GEMM on the spec's execution substrate."""
+    run the ΔW GEMM on the spec's execution substrate.
+
+    With `shard` set the GEMM itself is untouched (w/prev_out are already the
+    shard-local [K, N/S] slices) — only the dma/grid accounting changes:
+    every per-panel formula is linear in the n-panel count, so it is
+    evaluated at gn=1 and scaled by the shard's owned GLOBAL panel count
+    (counters.py ownership partition; the sum over shards is bitwise the
+    unsharded value)."""
     n = w.shape[-1]
     enc = _encode(xm, cache, spec, w.dtype, impl)
     path = resolve_exec_path(spec, impl)
     gm, gk = enc.block_mask.shape
     gn = -(-n // spec.block_n)
+    gn_own = None if shard is None else owned_panel_count(shard)
     interpret = _interpret_arg(impl)
     sel = None
     dma_issued = None
@@ -154,11 +170,18 @@ def _reuse_eval(
         )
         # The gather streams each live K-block's weight panel once,
         # shared across all rows.
-        dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn
-        grid_steps = ops.ragged_grid_steps(
-            jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
-            gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
-        )
+        if shard is None:
+            dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn
+            grid_steps = ops.ragged_grid_steps(
+                jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
+                gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+            )
+        else:
+            dma_issued = jnp.sum(k_mask).astype(jnp.int32) * gn_own
+            grid_steps = ops.ragged_grid_steps(
+                jnp.broadcast_to(jnp.sum(k_mask), (gm,)),
+                gm=gm, gn=1, gk=gk, max_active_k=spec.max_active_k,
+            ) * gn_own.astype(jnp.float32)
         overflow = ops.budget_overflow(
             jnp.sum(k_mask), gk=gk, max_active_k=spec.max_active_k
         )
@@ -170,10 +193,16 @@ def _reuse_eval(
             block_k=spec.block_k, max_active_k=spec.max_active_k,
             interpret=interpret, compacted=(idx, counts),
         )
-        dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
-        grid_steps = ops.ragged_grid_steps(
-            counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
-        )
+        if shard is None:
+            dma_issued = ops.ragged_dma_tiles(counts, gn=gn)
+            grid_steps = ops.ragged_grid_steps(
+                counts, gm=gm, gn=gn, gk=gk, max_active_k=spec.max_active_k,
+            )
+        else:
+            dma_issued = ops.ragged_dma_tiles(counts, gn=1) * gn_own
+            grid_steps = ops.ragged_grid_steps(
+                counts, gm=gm, gn=1, gk=gk, max_active_k=spec.max_active_k,
+            ) * gn_own.astype(jnp.float32)
         overflow = ops.budget_overflow(
             counts, gk=gk, max_active_k=spec.max_active_k
         )
@@ -209,9 +238,17 @@ def _reuse_eval(
         )
     if "sensor" in cache:
         if dma_issued is None:  # kernel/dense: masked full-grid semantics
-            dma_issued = ops.weight_dma_tiles(
-                enc.block_mask, gn=gn, dataflow=spec.dataflow, sel=sel,
-            )
+            if shard is None:
+                dma_issued = ops.weight_dma_tiles(
+                    enc.block_mask, gn=gn, dataflow=spec.dataflow, sel=sel,
+                )
+            else:
+                dma_issued = ops.weight_dma_tiles(
+                    enc.block_mask, gn=1, dataflow=spec.dataflow, sel=sel,
+                ) * gn_own
+        if grid_steps is None and shard is not None:
+            # masked full-grid walk over the shard's owned global panels
+            grid_steps = (jnp.int32(gm * gk) * gn_own).astype(jnp.float32)
         new_cache["sensor"] = update_on_reuse(
             cache["sensor"], block_mask=enc.block_mask, row_sim=row_sim,
             block_m=spec.block_m, block_k=spec.block_k, n=n, gn=gn,
@@ -219,6 +256,7 @@ def _reuse_eval(
             dma_issued=dma_issued,
             grid_steps=grid_steps,
             overflow=overflow,
+            shard=shard,
         )
     stats = ReuseStats(
         similarity=sim,
@@ -237,6 +275,7 @@ def reuse_linear(
     mode: str | None = "reuse",         # "reuse" | "basic" | None (= ctrl)
     impl: str = "jnp",
     ema_decay: float = 0.9,
+    shard: ShardCtx | None = None,      # model-axis shard accounting context
 ) -> tuple[jax.Array, dict[str, jax.Array], ReuseStats]:
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -246,10 +285,11 @@ def reuse_linear(
     assert cache["prev_q"].shape == (m, k), (cache["prev_q"].shape, (m, k))
 
     if mode == "basic":
-        out, new_cache, stats = _basic_eval(xm, w, cache, spec, ema_decay)
+        out, new_cache, stats = _basic_eval(xm, w, cache, spec, ema_decay,
+                                            shard)
     elif mode == "reuse":
         out, new_cache, stats = _reuse_eval(xm, w, cache, spec, impl,
-                                            ema_decay)
+                                            ema_decay, shard)
     elif mode is None:
         # Array-resident kernelMode: branch on this layer's ctrl lane. Both
         # branches trace once (identical cache/stats structure); at runtime
@@ -263,8 +303,8 @@ def reuse_linear(
             )
         out, new_cache, stats = jax.lax.cond(
             ctrl["mode_id"] > 0,
-            lambda: _reuse_eval(xm, w, cache, spec, impl, ema_decay),
-            lambda: _basic_eval(xm, w, cache, spec, ema_decay),
+            lambda: _reuse_eval(xm, w, cache, spec, impl, ema_decay, shard),
+            lambda: _basic_eval(xm, w, cache, spec, ema_decay, shard),
         )
     else:
         raise ValueError(f"unknown mode {mode!r}")

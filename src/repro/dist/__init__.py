@@ -1,0 +1,18 @@
+"""repro.dist — model-axis sharding of the reuse state.
+
+`repro.dist.shard` plans shard-local site specs, builds NamedShardings that
+pin each sharded cache leaf's shard axis to the mesh "model" axis, and
+exposes the HLO shape signatures the no-gather assertion matches against.
+
+(`repro.dist.sharding` — full per-arch weight partition specs — is a
+separate, still-open roadmap item; tests/test_sharding.py skips until it
+lands.)
+"""
+
+from repro.dist.shard import (  # noqa: F401
+    cache_shape_signatures,
+    cache_shardings,
+    plan_local_spec,
+    shard_axis_of,
+    validate_shardable,
+)

@@ -81,6 +81,12 @@ def _probe_compiled_pallas_cpu() -> bool:
     Current jaxlib CPU lowering raises "Only interpret mode is supported on
     CPU backend" — but that is a jaxlib property, not a law; probe instead of
     assuming so a capable jaxlib is picked up automatically.
+
+    The probe forces an explicit lower+compile rather than an eager call: the
+    first `resolve(None)` may happen INSIDE a trace (a kernel wrapper under
+    lax.cond/vmap), where an eager pallas_call would merely be traced — no
+    lowering runs, no error fires, and an incapable jaxlib would be mistaken
+    for a capable one and cached for the process.
     """
     try:
         from jax.experimental import pallas as pl
@@ -89,10 +95,13 @@ def _probe_compiled_pallas_cpu() -> bool:
             o_ref[...] = x_ref[...] * 2.0
 
         x = jnp.ones((8, 128), jnp.float32)
-        out = pl.pallas_call(
-            _k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        )(x)
-        jax.block_until_ready(out)
+
+        def _call(v):
+            return pl.pallas_call(
+                _k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(v)
+
+        jax.jit(_call).lower(x).compile()
         return True
     except Exception:
         return False

@@ -15,6 +15,75 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_host_mesh(n_devices: int, model_size: int | None = None):
+    """Small mocked mesh over host devices (tests/CI): ("data", "model") with
+    the model axis `model_size` wide (default: every device on the model
+    axis — the sharded-serving test shape).
+
+    Host devices come from `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+    (set BEFORE jax initializes); validate up front with actionable errors
+    instead of letting jax.make_mesh fail on an opaque reshape.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if model_size is None:
+        model_size = n_devices
+    if model_size < 1 or n_devices % model_size:
+        raise ValueError(
+            f"model_size={model_size} must divide n_devices={n_devices} "
+            f"(mesh shape is (data={n_devices}//{model_size}, "
+            f"model={model_size}))"
+        )
+    avail = jax.device_count()
+    if avail < n_devices:
+        raise RuntimeError(
+            f"mesh wants {n_devices} devices but only {avail} are visible — "
+            f"mock host devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            f"(must be set before jax initializes)"
+        )
+    return jax.make_mesh(
+        (n_devices // model_size, model_size), ("data", "model")
+    )
+
+
+def parse_mesh_spec(spec: str):
+    """Mesh from a CLI spec string.
+
+    "host:N"    — N mocked host devices, all on the model axis
+    "host:N@S"  — N host devices, model axis S wide (data axis N/S)
+    "prod"      — the fixed 16x16 production pod
+    "prod-pod"  — 2x16x16 multi-pod
+    """
+    s = spec.strip().lower()
+    if s == "prod":
+        return make_production_mesh()
+    if s in ("prod-pod", "prod:pod"):
+        return make_production_mesh(multi_pod=True)
+    if s.startswith("host:"):
+        body = s[len("host:"):]
+        model: int | None = None
+        if "@" in body:
+            body, model_s = body.split("@", 1)
+            try:
+                model = int(model_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad mesh spec {spec!r}: model size {model_s!r} is not "
+                    "an integer") from None
+        try:
+            n = int(body)
+        except ValueError:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: device count {body!r} is not an "
+                "integer") from None
+        return make_host_mesh(n, model)
+    raise ValueError(
+        f"unknown mesh spec {spec!r} — expected 'host:N', 'host:N@S', "
+        "'prod', or 'prod-pod'"
+    )
+
+
 def mesh_axes(mesh) -> dict:
     """Role map for the sharding rules."""
     names = mesh.axis_names

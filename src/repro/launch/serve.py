@@ -118,6 +118,17 @@ def main() -> None:
                     "latest step at start (ctrl-block precedence: checkpoint "
                     "< tuned table < live controller, resolutions journaled) "
                     "and save the final cache at exit; requires --reuse")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="shard the reuse serve across a device mesh "
+                    "(repro.launch.mesh specs: 'host:N' puts N mocked host "
+                    "devices on the model axis — set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=N first — "
+                    "'host:N@S' makes the model axis S wide, 'prod' the "
+                    "16x16 pod). The reuse cache is sharded along the model "
+                    "axis with the weights it shadows; skip decisions stay "
+                    "shard-local (compiled step is asserted gather-free on "
+                    "cache buffers at startup) and sensor counters cross the "
+                    "mesh once per control window; requires --reuse")
     ap.add_argument("--inject", default=None, metavar="SCENARIO[:k=v,...]",
                     help="arm a deterministic fault scenario "
                     "(repro.guard.inject.SCENARIOS) at the production seams "
@@ -126,7 +137,8 @@ def main() -> None:
     args = ap.parse_args()
 
     for flag in ("sensor_jsonl", "tuned_policy", "refresh_every", "affinity",
-                 "control_every", "control_journal", "cache_ckpt", "inject"):
+                 "control_every", "control_journal", "cache_ckpt", "inject",
+                 "mesh"):
         if getattr(args, flag) and not args.reuse:
             ap.error(f"--{flag.replace('_', '-')} requires --reuse")
     if args.control_journal and not args.control_every:
@@ -173,6 +185,7 @@ def main() -> None:
 
     engine = None
     rcache = None
+    mesh = None
     if args.reuse:
         policy = None
         if args.tuned_policy:
@@ -182,7 +195,27 @@ def main() -> None:
             print(f"tuned policy: {len(policy.site_tunables)} site entries "
                   f"from {args.tuned_policy}")
         engine = build_reuse_engine(cfg, impl="jnp", policy=policy)
+        if args.mesh:
+            from repro.launch.mesh import mesh_axes, parse_mesh_spec
+
+            mesh = parse_mesh_spec(args.mesh)
+            ax = mesh_axes(mesh)
+            planned = engine.shard_sites(ax["model_size"])
+            print(f"mesh: {dict(mesh.shape)} — {len(planned)} sites sharded "
+                  f"{ax['model_size']}-way on the model axis")
         rcache = engine.init_cache(args.batch_slots)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.dist.shard import cache_shardings
+
+            # cache shards live WITH the weight columns they shadow; params
+            # and decode state replicate (GSPMD partitions the step around
+            # the committed input shardings)
+            rcache = jax.device_put(
+                rcache, cache_shardings(engine, mesh, rcache))
+            replicated = NamedSharding(mesh, PartitionSpec())
+            params = jax.device_put(params, replicated)
+            state = jax.device_put(state, replicated)
         from repro.kernels import backend as kernel_backend
 
         print(f"kernel substrate: {kernel_backend.describe()}")
@@ -265,6 +298,35 @@ def main() -> None:
         return fn
 
     decode_jit = jit_decode_factory()
+
+    if mesh is not None:
+        # The sharded-serving hot-path invariant, proven on the COMPILED
+        # artifact: no all-gather/all-to-all in the donated serve step may
+        # touch a reuse-cache buffer (shard-local quantize→delta→mask→skip;
+        # the once-per-window counter all-reduce rides the ctrl snapshot,
+        # not this step). Checked once at startup against the post-SPMD HLO.
+        from repro.dist.shard import cache_shape_signatures
+        from repro.roofline.hlo_parse import (
+            cache_collective_violations,
+            parse_collective_bytes,
+        )
+
+        aval = functools.partial(jax.tree.map, lambda a: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=a.sharding))
+        tok_aval = jax.ShapeDtypeStruct((args.batch_slots, 1), jnp.int32)
+        hlo = decode_jit.lower(
+            aval(params), tok_aval, aval(state), aval(rcache)
+        ).compile().as_text()
+        violations = cache_collective_violations(
+            hlo, cache_shape_signatures(rcache))
+        if violations:
+            raise RuntimeError(
+                "sharded serve step gathers reuse-cache state across the "
+                f"mesh — hot-path invariant violated: {violations}")
+        coll = parse_collective_bytes(hlo)
+        print(f"hlo no-gather check: OK — 0 cache-touching gathers "
+              f"({coll['count']} collectives, "
+              f"{coll['total_bytes']/1e3:.1f} KB/device in compiled step)")
 
     sstate = {"state": state, "rcache": rcache}
 
@@ -525,6 +587,22 @@ def main() -> None:
     if engine is not None:
         report = engine.sensor_report(sstate["rcache"])
         print("\n".join(report.summary_lines()))
+        if engine.shards:
+            # per-shard skip rates from one final cross-mesh snapshot (the
+            # same [S] lanes the controller journals per window)
+            snap = engine.ctrl_snapshot(sstate["rcache"])
+            for name in sorted(engine.shards):
+                s = snap.get(name, {})
+                if "skipped_shard" not in s:
+                    continue
+                sk = np.asarray(s["skipped_shard"], np.float64)
+                cp = np.asarray(s["computed_shard"], np.float64)
+                rates = sk / np.maximum(sk + cp, 1e-9)
+                print(f"shard skip {name}: " + " ".join(
+                    f"s{i}={r:.3f}" for i, r in enumerate(rates)))
+            print(f"ici traffic: reduce={engine.ici_reduce_bytes/1e3:.1f} KB "
+                  f"ctrl-writes={engine.ici_write_bytes/1e3:.1f} KB "
+                  f"(priced at E_ICI in the sensor energy report)")
         if args.sensor_jsonl:
             report.write_jsonl(args.sensor_jsonl)
             print(f"sensor report appended to {args.sensor_jsonl}")

@@ -390,6 +390,9 @@ class FleetAggregator:
                 "saved_dynamic_j": math.fsum(
                     e["saved_dynamic_j"] for e in energies),
             },
+            # cross-mesh ICI spend (sharded replicas only; counter rows from
+            # unsharded replicas carry no ici keys and contribute 0.0)
+            ici_j=math.fsum(e.get("ici_j", 0.0) for e in energies),
             latency={
                 "serve_step_count": len(all_serve),
                 "serve_step_p50_s": (float(np.quantile(all_serve, 0.5))

@@ -70,6 +70,61 @@ def parse_collective_bytes(hlo_text: str) -> dict:
     }
 
 
+# The sharded-serving hot-path invariant (repro.dist): reuse-cache state may
+# never be GATHERED across the mesh — the once-per-window counter all-reduce
+# is the only allowed cross-shard movement. These are the collective kinds
+# that move shard-resident state to other shards wholesale.
+_GATHER_KINDS = ("all-gather", "all-to-all")
+
+
+def iter_collectives(hlo_text: str):
+    """Yield (name, kind, [(dtype, dims_tuple), ...]) per collective result.
+
+    Shapes are the RESULT shapes (post-SPMD HLO: per-device locals; an
+    all-gather's result is the gathered — global — extent along its axis).
+    Async -start/-done pairs dedupe to the -start op.
+    """
+    for m in _OP_RE.finditer(hlo_text):
+        name, tuple_body, dtype, dims, kind = m.groups()
+        if name.endswith(".clone") or "-done" in name:
+            continue
+        if tuple_body is not None:
+            shapes = [
+                (dt, tuple(int(d) for d in dm.split(",") if d))
+                for dt, dm in _TUPLE_ELEM_RE.findall(tuple_body)
+            ]
+        else:
+            shapes = [(dtype, tuple(int(d) for d in dims.split(",") if d))]
+        yield name, kind, shapes
+
+
+def cache_collective_violations(
+    hlo_text: str, cache_signatures: set
+) -> list[dict]:
+    """All-gather/all-to-all ops in compiled HLO whose result shape matches a
+    reuse-cache buffer signature — the no-gather hot-path assertion.
+
+    `cache_signatures` is `repro.dist.shard.cache_shape_signatures(cache)`:
+    (hlo_dtype, dims) of every cache leaf at both its GLOBAL and per-device
+    LOCAL shape. An all-gather materializing a cache leaf's global shape (or
+    an all-to-all reshuffling its local shape) is exactly the cross-shard
+    cache movement the sharded design forbids; activation collectives (whose
+    shapes don't carry the cache's [layer, shard] leading dims) pass through.
+    Returns one {op, kind, dtype, dims} per offending op — empty = invariant
+    holds.
+    """
+    violations = []
+    for name, kind, shapes in iter_collectives(hlo_text):
+        if kind not in _GATHER_KINDS:
+            continue
+        for dt, dims in shapes:
+            if (dt, dims) in cache_signatures:
+                violations.append(
+                    {"op": name, "kind": kind, "dtype": dt, "dims": dims}
+                )
+    return violations
+
+
 def summarize_cost(cost: dict | None) -> dict:
     if not cost:
         return {}

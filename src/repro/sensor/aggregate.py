@@ -264,6 +264,36 @@ def _entry_rows(name: str, entry: dict, spec=None,
     return rows
 
 
+def _collapse_shard_entry(entry: dict, axis: int) -> dict:
+    """Collapse a model-sharded entry's shard axis host-side, BEFORE the row
+    builder (whose leading-axis heuristics must keep meaning "layers").
+
+    Counter lanes collapse per `COUNTER_SHARD_REDUCE`: the ownership
+    partition makes "sum" lanes disjoint slices of the dense baseline (their
+    plain sum is the unsharded counter bitwise); replicated lanes take shard
+    0. ctrl/steps are replicated across shards by construction — lane 0.
+    Returns a minimal host-numpy entry (sensor/ctrl/steps), which is all the
+    row builder reads."""
+    from repro.sensor.counters import COUNTER_SHARD_REDUCE
+
+    sensor = {}
+    for key, arr in entry["sensor"].items():
+        a = np.asarray(arr)
+        red = COUNTER_SHARD_REDUCE.get(key, "first")
+        sensor[key] = a.sum(axis=axis) if red == "sum" \
+            else np.take(a, 0, axis=axis)
+    out: dict[str, Any] = {
+        "sensor": sensor,
+        "steps": np.take(np.asarray(entry["steps"]), 0, axis=axis),
+    }
+    ctrl = entry.get("ctrl")
+    if ctrl is not None:
+        out["ctrl"] = {
+            k: np.take(np.asarray(v), 0, axis=axis) for k, v in ctrl.items()
+        }
+    return out
+
+
 def _sum_rows(name: str, rows: list[SiteSensor]) -> SiteSensor:
     hit = np.mean([r.slot_hit_rates for r in rows], axis=0)
     lane_steps = np.max([r.slot_steps for r in rows], axis=0)
@@ -310,10 +340,15 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
     array-resident ctrl block, per layer."""
     per_site, per_layer = [], []
     impl = getattr(engine, "impl", "jnp")
+    shards = getattr(engine, "shards", None) or {}
+    stacking = getattr(engine, "stacking", None) or {}
     for name in engine.sites:
         entry = cache[name]
         if "sensor" not in entry:
             continue
+        if name in shards:
+            entry = _collapse_shard_entry(
+                entry, 1 if stacking.get(name, 0) else 0)
         rows = _entry_rows(name, entry, spec=engine.sites[name], impl=impl)
         if rows[0].layer is not None:
             per_layer += rows
@@ -345,6 +380,15 @@ def build_report(engine, cache: dict[str, Any]) -> SensorReport:
         ),
         hit_rate=float(np.mean([s.hit_rate for s in per_site])) if per_site else 0.0,
     )
+    if shards:
+        # mesh provenance + interconnect payloads for the E_ICI pricing —
+        # additive keys, only on sharded runs (unsharded rows are unchanged
+        # byte for byte, which the cost-model regression test pins)
+        model["mesh_model_shards"] = max(shards.values())
+        model["ici_reduce_bytes"] = float(
+            getattr(engine, "ici_reduce_bytes", 0.0))
+        model["ici_ctrl_write_bytes"] = float(
+            getattr(engine, "ici_write_bytes", 0.0))
     return SensorReport(per_site=per_site, per_layer=per_layer, model=model)
 
 

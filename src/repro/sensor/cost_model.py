@@ -47,26 +47,42 @@ def sensor_energy(report) -> dict[str, Any]:
     baseline  — what the dense kernels would have spent on the instrumented
                 sites: every MAC issued, every weight tile streamed;
     measured  — what the reuse kernels actually spent (computed MACs + issued
-                weight traffic);
-    saved     — the skipped component; ``reduction`` is saved/baseline.
+                weight traffic), PLUS the interconnect cost a model-sharded
+                run pays: the once-per-window cross-mesh counter reduce and
+                the sharded ctrl-lane write fan-out, metered by the engine
+                into the report's ``ici_reduce_bytes``/``ici_ctrl_write_bytes``
+                and priced here at E_ICI (an unsharded report carries neither
+                key, so its numbers are unchanged bitwise);
+    saved     — the skipped component net of that interconnect spend;
+                ``reduction`` is saved/baseline.
     Static energy scales with step time, so its reduction follows the cycle
     model (`sensor_speedup`) — reported there, not double-counted here.
     """
     m = report.model
+    get = m.get if hasattr(m, "get") else lambda k, d=0.0: getattr(m, k, d)
     base_flops = m["total_macs"] * FLOPS_PER_MAC
     base_bytes = m["total_weight_bytes"]
     saved_flops = m["skipped_macs"] * FLOPS_PER_MAC
     saved_bytes = m["skipped_weight_bytes"]
+    ici_bytes = float(get("ici_reduce_bytes", 0.0)) \
+        + float(get("ici_ctrl_write_bytes", 0.0))
+    ici_j = ici_bytes * E_ICI
     base = base_flops * E_MAC + base_bytes * E_HBM
     saved = saved_flops * E_MAC + saved_bytes * E_HBM
-    return {
+    out = {
         "baseline_dynamic_j": base,
-        "measured_dynamic_j": base - saved,
-        "saved_dynamic_j": saved,
-        "dynamic_reduction": saved / max(base, 1e-30),
+        "measured_dynamic_j": base - saved + ici_j,
+        "saved_dynamic_j": saved - ici_j,
+        "dynamic_reduction": (saved - ici_j) / max(base, 1e-30),
         "saved_flops": saved_flops,
         "saved_hbm_bytes": saved_bytes,
     }
+    if ici_bytes:
+        # additive keys, sharded runs only — unsharded output stays
+        # key-for-key identical (pinned by the cost-model regression test)
+        out["ici_bytes"] = ici_bytes
+        out["ici_j"] = ici_j
+    return out
 
 
 def sensor_speedup(report) -> dict[str, Any]:

@@ -25,12 +25,81 @@ Accounting convention (documented once, used everywhere):
 Per-slot state (``slot_hit_sum``/``slot_steps``, shape [M]) survives inside
 the entry so the serving scheduler can reset exactly one lane when a slot is
 recycled and read per-request hit rates at retirement.
+
+Model-axis sharding (ownership partition). When a site's cache is sharded
+N-ways along the model axis (`ReuseEngine.shard_sites`), every shard sees the
+SAME replicated delta/mask (the compare path is shard-local and K is not
+split), so naive per-shard accounting would count each tile/MAC S times. The
+convention instead PARTITIONS the dense-baseline accounting by ownership:
+
+* tile/MAC/byte counters — shard s accounts only the k-tile columns with
+  ``col % S == s`` (an iota mask over the [gm, gk] grid), priced at the
+  GLOBAL N (``n_total``), so the plain sum over shards reproduces the
+  unsharded counters BITWISE (per-tile constants are exact f32 integers);
+* dma/grid counters — the formulas are linear in the n-panel count, so shard
+  s accounts the global panels with ``panel % S == s`` (callers evaluate the
+  per-panel formula at gn=1 and scale by `owned_panel_count`);
+* `reused_out_elems` — linear in N: each shard prices its LOCAL n columns.
+
+Counters that are NOT partitioned (mode bookkeeping, overflow, slot lanes)
+stay replicated across shards; `COUNTER_SHARD_REDUCE` records, per counter,
+whether a cross-shard rollup sums lanes or takes any one ("first").
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
+
+
+class ShardCtx(NamedTuple):
+    """Model-axis shard context threaded into one sharded site evaluation.
+
+    `index` is TRACED (the vmap-over-shards lane id); the rest are static
+    geometry of the GLOBAL site the shard belongs to."""
+
+    index: jax.Array   # int32 scalar — this shard's position on the model axis
+    count: int         # number of shards the site is split into
+    n_total: int       # global out_features (the shard computes n_total/count)
+    gn_total: int      # global n-panel count: ceil(n_total / block_n)
+
+
+# How each per-site counter collapses across model-axis shards. "sum": the
+# ownership partition above makes lanes disjoint — plain summation is the
+# global value, bitwise. "first": the lane is replicated (every shard runs the
+# same bookkeeping on the same replicated mask/row_sim) — take any one shard.
+COUNTER_SHARD_REDUCE: dict[str, str] = {
+    "skipped_tiles": "sum",
+    "computed_tiles": "sum",
+    "skipped_macs": "sum",
+    "computed_macs": "sum",
+    "skipped_weight_bytes": "sum",
+    "total_weight_bytes": "sum",
+    "reused_out_elems": "sum",
+    "dma_issued_tiles": "sum",
+    "grid_steps": "sum",
+    "overflow_fallbacks": "first",
+    "mode_flag": "first",
+    "mode_transitions": "first",
+    "suppressed_flips": "first",
+    "sentinel_trips": "first",
+    "slot_hit_sum": "first",
+    "slot_steps": "first",
+}
+
+
+def owned_k_mask(gk: int, shard: ShardCtx) -> jax.Array:
+    """bool [gk]: the k-tile columns shard `index` accounts (col % S == s)."""
+    return (jnp.arange(gk, dtype=jnp.int32) % shard.count) == shard.index
+
+
+def owned_panel_count(shard: ShardCtx) -> jax.Array:
+    """int32 scalar: how many GLOBAL n-panels shard `index` accounts."""
+    own = (jnp.arange(shard.gn_total, dtype=jnp.int32) % shard.count
+           ) == shard.index
+    return jnp.sum(own.astype(jnp.int32))
 
 
 def init_site_counters(batch: int) -> dict[str, jax.Array]:
@@ -92,6 +161,7 @@ def update_on_reuse(
     dma_issued: jax.Array | None = None,  # measured DMA count (kernel semantics)
     grid_steps: jax.Array | None = None,  # measured grid steps (ragged paths)
     overflow: jax.Array | None = None,    # budget-overflow fallback this call
+    shard: ShardCtx | None = None,        # model-axis ownership partition
 ) -> dict[str, jax.Array]:
     """Account one reuse-mode evaluation from its tile mask.
 
@@ -99,15 +169,32 @@ def update_on_reuse(
     (a dense stream of the site is gm·gk·gn such tiles per step), so the
     counter stays comparable across mode flips. grid_steps defaults to the
     full masked-grid walk gm·gk·gn (the "kernel"/"dense" paths visit every
-    tile even when they skip its DMA and MXU op)."""
+    tile even when they skip its DMA and MXU op).
+
+    With `shard` set, tile/MAC/byte increments cover only the shard's OWNED
+    k-tile columns priced at the global N (see module docstring) — callers
+    must then pass `dma_issued`/`grid_steps` already ownership-scaled (the
+    per-path formulas at gn=1 times `owned_panel_count`)."""
     gm, gk = block_mask.shape
-    computed = jnp.sum(block_mask).astype(jnp.int32)
-    total = jnp.int32(gm * gk)
+    if shard is None:
+        computed = jnp.sum(block_mask).astype(jnp.int32)
+        total = jnp.int32(gm * gk)
+        n_acct = n
+    else:
+        assert dma_issued is not None and grid_steps is not None, (
+            "sharded accounting needs ownership-scaled dma/grid overrides")
+        own = owned_k_mask(gk, shard)
+        computed = jnp.sum(
+            jnp.where(own[None, :], block_mask, 0)).astype(jnp.int32)
+        total = jnp.int32(gm) * jnp.sum(own.astype(jnp.int32))
+        n_acct = shard.n_total
     skipped = total - computed
-    macs_per_tile = float(block_m * block_k * n)
-    tile_w_bytes = float(block_k * n * w_itemsize)
+    macs_per_tile = float(block_m * block_k * n_acct)
+    tile_w_bytes = float(block_k * n_acct * w_itemsize)
     # m-row-blocks whose entire k-row of tiles is skipped pass their output
-    # through untouched: block_m · N output elements fully reused.
+    # through untouched: block_m · N output elements fully reused. Under the
+    # shard partition each shard prices its LOCAL n columns (linear in N, so
+    # the shard sum reproduces rows · block_m · n_total exactly).
     rows_all_skipped = jnp.sum(jnp.all(block_mask == 0, axis=1)).astype(jnp.float32)
     mode_flag, transitions = _mode_bookkeeping(sensor, 1)
     overflow_fallbacks = sensor.get("overflow_fallbacks")  # legacy caches: absent
@@ -126,7 +213,7 @@ def update_on_reuse(
         skipped_weight_bytes=sensor["skipped_weight_bytes"]
         + skipped.astype(jnp.float32) * tile_w_bytes,
         total_weight_bytes=sensor["total_weight_bytes"]
-        + jnp.float32(gm * gk) * tile_w_bytes,
+        + total.astype(jnp.float32) * tile_w_bytes,
         reused_out_elems=sensor["reused_out_elems"]
         + rows_all_skipped * float(block_m * n),
         dma_issued_tiles=sensor["dma_issued_tiles"]
@@ -154,22 +241,39 @@ def update_on_basic(
     block_m: int,
     block_k: int,
     w_itemsize: int,
+    shard: ShardCtx | None = None,
 ) -> dict[str, jax.Array]:
     """Account one basic-mode (reuse-OFF) evaluation: everything computed.
-    The dense kernel streams every weight tile: gm·gk·gn DMA units."""
+    The dense kernel streams every weight tile: gm·gk·gn DMA units. With
+    `shard`, the same ownership partition as `update_on_reuse`: owned k-tile
+    columns at global N for tiles/MACs/bytes, owned global n-panels for
+    dma/grid."""
     gm = -(-m // block_m)
     gk = -(-k // block_k)
-    total = gm * gk
-    macs_per_tile = float(block_m * block_k * n)
-    tile_w_bytes = float(block_k * n * w_itemsize)
+    if shard is None:
+        total = jnp.int32(gm * gk)
+        n_acct = n
+        dma = jnp.int32(gm * gk * gn)
+        grid = jnp.float32(gm * gk * gn)
+    else:
+        own = owned_k_mask(gk, shard)
+        total = jnp.int32(gm) * jnp.sum(own.astype(jnp.int32))
+        n_acct = shard.n_total
+        gn_own = owned_panel_count(shard)
+        dma = (jnp.int32(gm * gk) * gn_own).astype(jnp.int32)
+        grid = (jnp.int32(gm * gk) * gn_own).astype(jnp.float32)
+    macs_per_tile = float(block_m * block_k * n_acct)
+    tile_w_bytes = float(block_k * n_acct * w_itemsize)
     mode_flag, transitions = _mode_bookkeeping(sensor, 0)
     return dict(
         sensor,
-        computed_tiles=sensor["computed_tiles"] + jnp.int32(total),
-        computed_macs=sensor["computed_macs"] + float(total) * macs_per_tile,
-        total_weight_bytes=sensor["total_weight_bytes"] + float(total) * tile_w_bytes,
-        dma_issued_tiles=sensor["dma_issued_tiles"] + jnp.int32(total * gn),
-        grid_steps=sensor["grid_steps"] + jnp.float32(total * gn),
+        computed_tiles=sensor["computed_tiles"] + total,
+        computed_macs=sensor["computed_macs"]
+        + total.astype(jnp.float32) * macs_per_tile,
+        total_weight_bytes=sensor["total_weight_bytes"]
+        + total.astype(jnp.float32) * tile_w_bytes,
+        dma_issued_tiles=sensor["dma_issued_tiles"] + dma,
+        grid_steps=sensor["grid_steps"] + grid,
         mode_flag=mode_flag,
         mode_transitions=transitions,
         slot_hit_sum=sensor["slot_hit_sum"] + row_sim.astype(jnp.float32),

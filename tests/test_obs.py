@@ -390,7 +390,7 @@ def test_journal_v4_rows_and_stamping(tmp_path):
         retrace={},
     )
     plain = rep.to_dicts()
-    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION == 4
+    assert all(r["schema_version"] == CONTROL_JOURNAL_SCHEMA_VERSION == 5
                for r in plain)
     assert all("trace" not in r for r in plain)  # no ids -> v2 byte layout
     with events.context(run="RJ", window=1):
@@ -421,8 +421,11 @@ def test_journal_loads_v1_v2_rejects_future(tmp_path):
     assert replay_rows(rows).ok
 
     fut = tmp_path / "future.jsonl"
-    fut.write_text(json.dumps(dict(v1_dec, schema_version=5)) + "\n")
-    with pytest.raises(ValueError, match=r"future.jsonl:1.*schema_version 5"):
+    next_ver = CONTROL_JOURNAL_SCHEMA_VERSION + 1
+    fut.write_text(json.dumps(dict(v1_dec, schema_version=next_ver)) + "\n")
+    with pytest.raises(
+            ValueError,
+            match=rf"future.jsonl:1.*schema_version {next_ver}"):
         load_journal(str(fut))
 
 
